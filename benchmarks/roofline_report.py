@@ -1,0 +1,27 @@
+"""Roofline summary rows from dry-run artifacts (deliverable g)."""
+from __future__ import annotations
+
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+ART = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
+
+
+def bench_roofline() -> List[Row]:
+    from repro.launch.roofline import analyze, load_cells
+    rows: List[Row] = []
+    if not os.path.isdir(ART):
+        return [("roofline/missing", 0.0,
+                 f"run python -m repro.launch.dryrun first ({ART} not found)")]
+    for rec in load_cells(ART, "single"):
+        r = analyze(rec) if rec.get("status") == "ok" else None
+        if r is None:
+            continue
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}", r["bound_s"] * 1e6,
+            f"dom={r['dominant']} compute_s={r['compute_s']:.3e} "
+            f"memory_s={r['memory_s']:.3e} coll_s={r['collective_s']:.3e} "
+            f"useful={r['useful_ratio']:.2f} roofline={100*r['roofline_frac']:.1f}%"))
+    return rows

@@ -1,0 +1,62 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
+  characterization/compute      -> Table 2, Fig 2  (stressors)
+  characterization/scalability  -> Fig 3           (worker scaling)
+  characterization/memory       -> Fig 4           (sysbench)
+  characterization/link         -> Fig 5           (perftest RDMA)
+  accelerator/*                 -> Table 3         (RXP regex offload, G1)
+  background/*                  -> Figs 6, 8       (Redis replication, G2)
+  endpoint/*                    -> Figs 10-13      (Redis/Mongo sharding, G3)
+  anti_pattern/*                -> Fig 14          (Xenic cache, G4)
+  roofline/*                    -> deliverable (g) (from dry-run artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="substring filter on section names")
+    args = ap.parse_args()
+
+    from benchmarks import (accelerator, anti_pattern, background_offload,
+                            characterization, endpoint_sharding,
+                            roofline_report)
+    sections = [
+        ("characterization.compute", characterization.bench_compute),
+        ("characterization.scalability", characterization.bench_scalability),
+        ("characterization.memory", characterization.bench_memory),
+        ("characterization.link", characterization.bench_link),
+        ("accelerator.attention", accelerator.bench_attention_paths),
+        ("accelerator.rmsnorm", accelerator.bench_rmsnorm_fused),
+        ("accelerator.numerics", accelerator.bench_kernel_numerics),
+        ("background.replication", background_offload.bench_replication_offload),
+        ("endpoint.sharding", endpoint_sharding.bench_sharding_throughput),
+        ("endpoint.ycsb", endpoint_sharding.bench_ycsb_mixes),
+        ("endpoint.threads", endpoint_sharding.bench_thread_saturation),
+        ("anti_pattern.cache", anti_pattern.bench_cache_anti_pattern),
+        ("roofline.table", roofline_report.bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row, us, derived in fn():
+                print(f"{row},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

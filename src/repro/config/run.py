@@ -1,0 +1,86 @@
+"""Run-level configs: mesh, training, serving, offload (paper guidelines)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Logical device mesh. Production: (16,16) per pod, 2 pods multi-pod."""
+    data: int = 1
+    model: int = 1
+    pod: int = 1
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.pod, self.data, self.model) if self.pod > 1 else (self.data, self.model)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.pod > 1 else ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        return self.pod * self.data * self.model
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadConfig:
+    """The paper's four guidelines as framework switches.
+
+    G1: ``use_accelerators`` — route hot-spot ops to Pallas kernels when the
+        shape is supported (general-purpose jnp fallback otherwise).
+    G2: ``background_offload`` — checkpoint/metrics/log work runs on the
+        sidecar (host threads), never blocking the step.
+    G3: ``endpoint_expansion`` — host DRAM as an extra memory endpoint
+        (host-resident optimizer master state with prefetch) and host-side
+        data sharding; ``replica_endpoints`` = peer hosts for ckpt replication.
+    G4: ``enforce_cost_model`` — placement planner rejects critical-path
+        offloads whose link cost exceeds the predicted saving.
+    """
+    use_accelerators: bool = True
+    background_offload: bool = True
+    endpoint_expansion: bool = False
+    replica_endpoints: int = 0
+    enforce_cost_model: bool = True
+    # Sidecar executor sizing
+    max_inflight_tasks: int = 4
+    sidecar_threads: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 8
+    seq_len: int = 128
+    steps: int = 100
+    microbatches: int = 1            # grad accumulation
+    learning_rate: float = 3e-4
+    warmup_steps: int = 10
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"         # "adamw" | "lion" | "sgdm"
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    z_loss: float = 1e-4
+    moe_aux_loss: float = 1e-2
+    seed: int = 0
+    remat: str = "none"              # "none" | "block" | "full"
+    grad_compression: str = "none"   # "none" | "int8_ef"
+    zero1: bool = True               # shard optimizer state over data axis
+    log_every: int = 10
+    ckpt_every: int = 0              # 0 -> disabled
+    ckpt_dir: str = ""
+    ckpt_keep: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq_len: int = 1024
+    prefill_chunk: int = 512
+    temperature: float = 0.0         # 0 -> greedy
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0

@@ -1,0 +1,81 @@
+"""Assigned input-shape registry + ShapeDtypeStruct stand-ins for the dry-run.
+
+Each architecture is paired with four shapes.  ``train_*`` shapes lower
+``train_step``; ``prefill_*`` lower the prefill ``serve_step``; ``decode_*`` /
+``long_*`` lower the one-token decode ``serve_step`` against a KV cache of
+``seq_len`` (per assignment spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, spec: ShapeSpec) -> bool:
+    """long_500k needs sub-quadratic attention (skip for full-attention archs)."""
+    if spec.name == "long_500k" and not cfg.supports_long_context:
+        return False
+    if spec.kind == "decode" and not cfg.has_decoder:
+        return False
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, spec: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    Returned dict is the kwargs of the corresponding step function's ``batch``
+    argument.  Modality frontends are stubs per the assignment: the input is
+    precomputed frame/patch embeddings, not raw pixels/waveforms.
+    """
+    b, s = spec.global_batch, spec.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if spec.kind == "train":
+        out["tokens"] = _sds((b, s), "int32")
+        out["targets"] = _sds((b, s), "int32")
+        out["loss_mask"] = _sds((b, s), "float32")
+    elif spec.kind == "prefill":
+        out["tokens"] = _sds((b, s), "int32")
+        out["positions"] = _sds((b, s), "int32")
+    elif spec.kind == "decode":
+        out["tokens"] = _sds((b, 1), "int32")
+        out["positions"] = _sds((b, 1), "int32")
+        # KV cache / recurrent state are part of the serve state, not inputs.
+    else:
+        raise ValueError(spec.kind)
+    if cfg.frontend != "none":
+        fs = cfg.frontend_seq_len or 256
+        fd = cfg.frontend_dim or cfg.d_model
+        if spec.kind in ("train", "prefill"):
+            out["frontend_embeds"] = _sds((b, fs, fd), cfg.dtype)
+        # decode: frontend embeddings already folded into the cache at prefill.
+    if cfg.is_encoder_decoder and spec.kind in ("train", "prefill"):
+        # encoder input tokens (audio stub: frames come via frontend_embeds)
+        enc_len = min(s, 4096) if cfg.frontend == "none" else 0
+        if enc_len:
+            out["encoder_tokens"] = _sds((b, enc_len), "int32")
+    return out

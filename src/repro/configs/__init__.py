@@ -1,0 +1,27 @@
+"""Importing this package registers every assigned architecture config."""
+from repro.configs import (  # noqa: F401
+    command_r_35b,
+    gemma_7b,
+    h2o_danube_1_8b,
+    llama32_vision_11b,
+    olmoe_1b_7b,
+    phi35_moe,
+    recurrentgemma_9b,
+    rwkv6_3b,
+    seamless_m4t_large_v2,
+    smollm_360m,
+    tiny,
+)
+
+ASSIGNED_ARCHS = (
+    "gemma-7b",
+    "command-r-35b",
+    "smollm-360m",
+    "h2o-danube-1.8b",
+    "phi3.5-moe-42b-a6.6b",
+    "olmoe-1b-7b",
+    "llama-3.2-vision-11b",
+    "recurrentgemma-9b",
+    "seamless-m4t-large-v2",
+    "rwkv6-3b",
+)

@@ -1,0 +1,24 @@
+"""command-r-35b [dense] — 40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000.
+
+GQA, no-bias, tied embeddings. [hf:CohereForAI/c4ai-command-r-v01; unverified]
+"""
+from repro.config import ModelConfig, register
+
+
+@register("command-r-35b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="command-r-35b",
+        family="dense",
+        num_layers=40,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=22528,
+        vocab_size=256_000,
+        mlp_kind="swiglu",
+        rope_theta=8_000_000.0,
+        qkv_bias=False,
+        tie_embeddings=True,
+    )

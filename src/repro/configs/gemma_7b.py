@@ -1,0 +1,24 @@
+"""gemma-7b [dense] — 28L d_model=3072 16H (kv=16) d_ff=24576 vocab=256000.
+
+GeGLU, head_dim=256, embedding scaling, tied embeddings. [arXiv:2403.08295; hf]
+"""
+from repro.config import ModelConfig, register
+
+
+@register("gemma-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="gemma-7b",
+        family="dense",
+        num_layers=28,
+        d_model=3072,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=256,
+        d_ff=24576,
+        vocab_size=256_000,
+        mlp_kind="geglu",
+        rope_theta=10_000.0,
+        tie_embeddings=True,
+        scale_embeddings=True,
+    )

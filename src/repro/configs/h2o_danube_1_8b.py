@@ -1,0 +1,27 @@
+"""h2o-danube-1.8b [dense] — 24L d_model=2560 32H (GQA kv=8) d_ff=6912 vocab=32000.
+
+Llama+mistral mix with sliding-window attention (window 4096); sub-quadratic,
+so the ``long_500k`` cell runs with a ring KV cache. [arXiv:2401.16818; hf]
+"""
+from repro.config import ModelConfig, register
+from repro.config.model import MIX_ATTN_LOCAL
+
+
+@register("h2o-danube-1.8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="h2o-danube-1.8b",
+        family="dense",
+        num_layers=24,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=80,
+        d_ff=6912,
+        vocab_size=32_000,
+        pattern=(MIX_ATTN_LOCAL,),
+        sliding_window=4096,
+        mlp_kind="swiglu",
+        rope_theta=10_000.0,
+        tie_embeddings=False,
+    )

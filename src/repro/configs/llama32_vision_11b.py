@@ -1,0 +1,31 @@
+"""llama-3.2-vision-11b [vlm] — 40L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256 — cross-attention image layers every 5th layer.
+
+The vision frontend is a STUB per the assignment spec: ``input_specs()``
+provides precomputed patch embeddings (frontend_seq_len x d_model) which the
+cross-attention layers attend to. [hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+"""
+from repro.config import ModelConfig, register
+from repro.config.model import MIX_ATTN, MIX_ATTN_CROSS
+
+
+@register("llama-3.2-vision-11b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="llama-3.2-vision-11b",
+        family="vlm",
+        num_layers=40,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=128_256,
+        pattern=(MIX_ATTN_CROSS, MIX_ATTN, MIX_ATTN, MIX_ATTN, MIX_ATTN),
+        mlp_kind="swiglu",
+        rope_theta=500_000.0,
+        tie_embeddings=False,
+        frontend="vision",
+        frontend_seq_len=1024,   # stub: 1024 precomputed patch embeddings
+        frontend_dim=4096,
+    )

@@ -1,0 +1,24 @@
+"""olmoe-1b-7b [moe] — 16L d_model=2048 16H (kv=16) d_ff=1024 vocab=50304,
+MoE 64 experts top-8. [arXiv:2409.02060; hf]
+"""
+from repro.config import ModelConfig, register
+
+
+@register("olmoe-1b-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="olmoe-1b-7b",
+        family="moe",
+        num_layers=16,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=1024,
+        vocab_size=50_304,
+        mlp_kind="swiglu",
+        num_experts=64,
+        experts_per_token=8,
+        rope_theta=10_000.0,
+        tie_embeddings=False,
+    )

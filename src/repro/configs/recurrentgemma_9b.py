@@ -1,0 +1,31 @@
+"""recurrentgemma-9b [hybrid] — 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000 — RG-LRU + local attention, 1 attention : 2 recurrent pattern.
+
+Constant-size state (RG-LRU carry + window-2048 ring KV) makes it
+sub-quadratic, so ``long_500k`` runs. [arXiv:2402.19427; unverified]
+"""
+from repro.config import ModelConfig, register
+from repro.config.model import MIX_ATTN_LOCAL, MIX_RGLRU
+
+
+@register("recurrentgemma-9b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="recurrentgemma-9b",
+        family="hybrid",
+        num_layers=38,
+        d_model=4096,
+        num_heads=16,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        vocab_size=256_000,
+        pattern=(MIX_RGLRU, MIX_RGLRU, MIX_ATTN_LOCAL),
+        sliding_window=2048,
+        rglru_width=4096,
+        rglru_conv_width=4,
+        mlp_kind="geglu",
+        rope_theta=10_000.0,
+        tie_embeddings=True,
+        scale_embeddings=True,
+    )

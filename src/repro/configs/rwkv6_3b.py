@@ -1,0 +1,25 @@
+"""rwkv6-3b "Finch" [ssm] — 32L d_model=2560 (attention-free) d_ff=8960
+vocab=65536 — data-dependent decay, O(1) state so ``long_500k`` runs.
+[arXiv:2404.05892; hf]
+"""
+from repro.config import ModelConfig, register
+from repro.config.model import MIX_RWKV6
+
+
+@register("rwkv6-3b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="rwkv6-3b",
+        family="ssm",
+        num_layers=32,
+        d_model=2560,
+        num_heads=0,
+        num_kv_heads=0,
+        head_dim=0,
+        d_ff=8960,
+        vocab_size=65_536,
+        pattern=(MIX_RWKV6,),
+        mlp_kind="rwkv_cmix",
+        rwkv_head_size=64,
+        tie_embeddings=False,
+    )

@@ -1,0 +1,34 @@
+"""seamless-m4t-large-v2 [audio] — 24L d_model=1024 16H (kv=16) d_ff=8192
+vocab=256206 — encoder-decoder, multimodal.
+
+Per the assignment spec the modality frontend is a STUB: the encoder consumes
+precomputed audio-frame embeddings from ``input_specs()``; only the
+transformer backbone (24 enc + 24 dec layers) is modelled.
+[arXiv:2308.11596; hf]
+"""
+from repro.config import ModelConfig, register
+from repro.config.model import MIX_ATTN_CROSS
+
+
+@register("seamless-m4t-large-v2")
+def config() -> ModelConfig:
+    return ModelConfig(
+        pattern=(MIX_ATTN_CROSS,),   # decoder: self-attn + cross-attn to encoder
+        arch_id="seamless-m4t-large-v2",
+        family="audio",
+        num_layers=24,
+        num_encoder_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=256_206,
+        mlp_kind="gelu",
+        rope_theta=10_000.0,
+        tie_embeddings=True,
+        is_encoder_decoder=True,
+        frontend="audio",
+        frontend_seq_len=1024,   # stub: 1024 precomputed audio-frame embeddings
+        frontend_dim=1024,
+    )

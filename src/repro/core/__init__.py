@@ -1,0 +1,26 @@
+"""The paper's contribution: DPU/sidecar offload doctrine as framework code.
+
+  characterize.py — §3 performance characterization (stressors, memory, link)
+  costmodel.py    — placement calculus implementing guidelines G1-G4
+  planner.py      — task-inventory -> OffloadPlan with rationales
+  executor.py     — G2: background sidecar executor (bounded, fault-isolated)
+  endpoint.py     — G3: host memory pool, peer endpoints, hash sharding
+  accelerators.py — G1: dedicated-accelerator registry (Pallas kernels)
+  anti_patterns.py— G4: the on-path cache, implemented to be measured
+"""
+from repro.core.accelerators import AcceleratedOp, get_op, list_ops, register_op, select
+from repro.core.characterize import SidecarProfile, characterize
+from repro.core.costmodel import CostModel, Decision, Placement, TaskProfile
+from repro.core.endpoint import (
+    EndpointRegistry, HostMemoryPool, PeerEndpoint, ShardedStore, hash_slot)
+from repro.core.executor import BackgroundExecutor
+from repro.core.planner import OffloadPlan, OffloadPlanner, training_task_inventory
+
+__all__ = [
+    "AcceleratedOp", "get_op", "list_ops", "register_op", "select",
+    "SidecarProfile", "characterize",
+    "CostModel", "Decision", "Placement", "TaskProfile",
+    "EndpointRegistry", "HostMemoryPool", "PeerEndpoint", "ShardedStore",
+    "hash_slot", "BackgroundExecutor",
+    "OffloadPlan", "OffloadPlanner", "training_task_inventory",
+]

@@ -1,0 +1,62 @@
+"""Dedicated-accelerator registry — paper G1 as a framework feature.
+
+The BlueField exposes fixed-function units (RXP regex, crypto) behind the
+narrow DOCA interface; the TPU analog is fixed-function compute exposed
+behind narrow kernel interfaces: the MXU via Pallas kernels with explicit
+BlockSpec VMEM tiling.  Like the paper's accelerators, each entry:
+
+  * has a *support predicate* (the RXP only accepts compiled ROF rule files;
+    our kernels only accept aligned shapes/dtypes),
+  * a *general-purpose fallback* (Hyperscan-on-ARM in the paper; the pure-jnp
+    ``ref`` oracle here),
+  * and is selected automatically when supported (``select``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass
+class AcceleratedOp:
+    name: str
+    kernel: Callable          # Pallas path (TPU target; interpret on CPU)
+    reference: Callable       # pure-jnp general-purpose fallback
+    supported: Callable[..., bool]   # shape/dtype predicate
+    description: str = ""
+
+
+_REGISTRY: Dict[str, AcceleratedOp] = {}
+
+
+def register_op(op: AcceleratedOp) -> None:
+    _REGISTRY[op.name] = op
+
+
+def get_op(name: str) -> AcceleratedOp:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def list_ops() -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+def select(name: str, *args, use_accelerators: bool = True, **kwargs) -> Callable:
+    """Return the accelerator impl when enabled+supported, else the fallback.
+
+    Mirrors DOCA's dispatch: the caller never touches the hardware details.
+    """
+    op = get_op(name)
+    if use_accelerators and op.supported(*args, **kwargs):
+        return op.kernel
+    return op.reference
+
+
+def _ensure_loaded() -> None:
+    if _REGISTRY:
+        return
+    # Importing the kernel packages registers their ops.
+    from repro.kernels import register_all  # noqa: PLC0415
+    register_all()

@@ -1,0 +1,60 @@
+"""The on-path anti-pattern, implemented to be measured (paper G4 / Fig 14).
+
+Xenic keeps a hot-data cache ON the NIC because an on-path SmartNIC sits
+between network and host — a cache hit saves the PCIe hop.  The paper shows
+that copying this design to an *off-path* part is strictly worse: even a
+100% hit rate pays the NIC-switch + full-network-stack detour.
+
+TPU translation: keeping a "hot" activation/KV block in **host RAM consulted
+synchronously inside the serve step**.  Every lookup pays d2h+h2d through the
+JAX runtime (the PCIe/stack analog), so hit latency still exceeds the
+HBM-resident baseline.  ``benchmarks.anti_pattern`` measures baseline /
+hit / miss exactly like Fig 14, and ``core.costmodel`` rejects this placement
+(G4) — this module exists so the rejection is demonstrated, not asserted.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HostSidecarCache:
+    """KV blocks cached in host memory, consulted on the critical path."""
+
+    def __init__(self):
+        self._store: Dict[int, np.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def put(self, key: int, value: jax.Array) -> None:
+        self._store[key] = np.asarray(jax.device_get(value))
+
+    def lookup(self, key: int) -> Optional[jax.Array]:
+        """Critical-path lookup: hit pays h2d; miss pays nothing but falls
+        through to the device-side fetch (which the caller still executes)."""
+        host = self._store.get(key)
+        if host is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return jax.device_put(host)
+
+
+def serve_get_baseline(table: jax.Array, key: int) -> jax.Array:
+    """Device-resident read: the paper's 'Baseline' bar."""
+    return table[key]
+
+
+def serve_get_with_cache(table: jax.Array, key: int,
+                         cache: HostSidecarCache) -> jax.Array:
+    """The anti-pattern: consult the host cache first, fall back to device."""
+    hit = cache.lookup(key)
+    if hit is not None:
+        return hit
+    val = table[key]
+    cache.put(key, val)   # fill on miss (adds yet more critical-path cost)
+    return val

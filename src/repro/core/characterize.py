@@ -1,0 +1,189 @@
+"""Sidecar performance characterization — the paper's §3 adapted to TPU pods.
+
+The paper characterizes a BlueField SmartNIC against its host with
+stress-ng (compute, Table 2 / Figs 2-3), sysbench (memory, Fig 4) and
+perftest (host<->NIC link, Fig 5).  Here the "sidecar" is the per-worker host
+CPU and the "host" role is played by the TPU (modeled — this container is
+CPU-only, so accelerator-side numbers come from the v5e datasheet constants
+also used by the roofline).
+
+Measured on the actual machine:
+  * sidecar compute throughput per op class (matmul / sort / hash / memcpy —
+    the stress-ng-analog stressor suite),
+  * sidecar memory bandwidth across block sizes (sysbench-analog),
+  * host<->device transfer latency and bandwidth across payload sizes
+    (perftest-analog; device_put/device_get through the JAX runtime).
+
+The resulting ``SidecarProfile`` feeds ``core.costmodel`` — the paper's
+doctrine that offload decisions must be grounded in measured characterization
+(its §3 precedes its guidelines) is preserved structurally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+
+# --- modeled accelerator-side constants (TPU v5e datasheet; roofline uses
+#     the same numbers) --------------------------------------------------------
+TPU_PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+TPU_HBM_BW = 819e9               # bytes/s per chip
+TPU_ICI_BW = 50e9                # bytes/s per link
+TPU_PCIE_BW = 16e9               # bytes/s host<->chip (the "NIC switch" analog)
+TPU_PCIE_LAT = 20e-6             # seconds, per-transfer overhead
+DCN_BW = 25e9 / 8                # bytes/s host<->peer-host (200GbE-ish)
+DCN_LAT = 10e-6
+
+
+@dataclasses.dataclass
+class StressorResult:
+    name: str
+    klass: str                   # "cpu" | "memory" | "link"
+    ops_per_sec: float
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class SidecarProfile:
+    """Everything the cost model needs, with measurement provenance."""
+    sidecar_matmul_flops: float      # measured f32 GEMM FLOP/s on host
+    sidecar_mem_bw: float            # measured bytes/s
+    link_lat: float                  # measured h2d latency floor (s)
+    link_bw: float                   # measured h2d bandwidth (bytes/s)
+    accel_flops: float = TPU_PEAK_FLOPS
+    accel_mem_bw: float = TPU_HBM_BW
+    stressors: List[StressorResult] = dataclasses.field(default_factory=list)
+
+    @property
+    def compute_ratio(self) -> float:
+        """sidecar/accelerator compute ratio — the paper's Table-2 headline
+        (BlueField ARM ≈ 0.1-0.6x host; host CPU ≈ 1e-3x TPU MXU)."""
+        return self.sidecar_matmul_flops / self.accel_flops
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, default=str)
+
+
+def _time_it(fn: Callable[[], None], min_time: float = 0.05) -> float:
+    fn()  # warmup
+    n, t = 0, 0.0
+    start = time.perf_counter()
+    while t < min_time:
+        fn()
+        n += 1
+        t = time.perf_counter() - start
+    return t / n
+
+
+# ----------------------------------------------------------------------------
+# stress-ng-analog stressors (paper Table 2)
+# ----------------------------------------------------------------------------
+
+def stressor_matmul(n: int = 384) -> Tuple[float, float]:
+    a = np.random.rand(n, n).astype(np.float32)
+    b = np.random.rand(n, n).astype(np.float32)
+    dt = _time_it(lambda: a @ b)
+    return 2 * n ** 3 / dt, dt
+
+
+def stressor_qsort(n: int = 100_000) -> float:
+    x = np.random.rand(n).astype(np.float32)
+    dt = _time_it(lambda: np.sort(x, kind="quicksort"))
+    return n / dt
+
+
+def stressor_bsearch(n: int = 100_000, q: int = 4096) -> float:
+    x = np.sort(np.random.rand(n).astype(np.float32))
+    keys = np.random.rand(q).astype(np.float32)
+    dt = _time_it(lambda: np.searchsorted(x, keys))
+    return q / dt
+
+
+def stressor_hash(n: int = 1 << 20) -> float:
+    import hashlib
+    buf = np.random.bytes(n)
+    dt = _time_it(lambda: hashlib.sha256(buf).digest())
+    return n / dt
+
+
+def stressor_crypt(n: int = 1 << 18) -> float:
+    import zlib
+    buf = np.random.bytes(n)
+    dt = _time_it(lambda: zlib.crc32(buf))
+    return n / dt
+
+
+def stressor_memcpy(nbytes: int = 1 << 24) -> float:
+    src = np.random.bytes(nbytes)
+    arr = np.frombuffer(src, np.uint8)
+    dt = _time_it(lambda: arr.copy())
+    return nbytes / dt
+
+
+# ----------------------------------------------------------------------------
+# sysbench-analog: memory bandwidth across block sizes (paper Fig 4)
+# ----------------------------------------------------------------------------
+
+def memory_sweep(block_sizes=(1 << 10, 1 << 14, 1 << 18, 1 << 22, 1 << 25)
+                 ) -> Dict[int, float]:
+    out = {}
+    for bs in block_sizes:
+        arr = np.zeros(bs, np.uint8)
+        dt = _time_it(lambda: arr.copy())
+        out[bs] = bs / dt
+    return out
+
+
+# ----------------------------------------------------------------------------
+# perftest-analog: host<->device link sweep (paper Fig 5)
+# ----------------------------------------------------------------------------
+
+def link_sweep(payloads=(1 << 10, 1 << 14, 1 << 18, 1 << 22)
+               ) -> Dict[int, Tuple[float, float]]:
+    """Returns {payload_bytes: (latency_s, bandwidth_B/s)} for device_put."""
+    dev = jax.devices()[0]
+    out = {}
+    for n in payloads:
+        host = np.zeros(n // 4, np.float32)
+
+        def xfer():
+            jax.device_put(host, dev).block_until_ready()
+        dt = _time_it(xfer)
+        out[n] = (dt, n / dt)
+    return out
+
+
+def characterize(quick: bool = False) -> SidecarProfile:
+    """Run the full §3-analog suite and build the profile."""
+    mm_flops, _ = stressor_matmul(192 if quick else 384)
+    stressors = [
+        StressorResult("matmul", "cpu", mm_flops, "f32 GEMM FLOP/s"),
+        StressorResult("qsort", "cpu", stressor_qsort(20_000 if quick else 100_000)),
+        StressorResult("bsearch", "cpu", stressor_bsearch(20_000 if quick else 100_000)),
+        StressorResult("hash", "cpu", stressor_hash(1 << (16 if quick else 20))),
+        StressorResult("crypt", "cpu", stressor_crypt(1 << (14 if quick else 18))),
+        StressorResult("memcpy", "memory", stressor_memcpy(1 << (20 if quick else 24))),
+    ]
+    mem = memory_sweep((1 << 14, 1 << 20) if quick else
+                       (1 << 10, 1 << 14, 1 << 18, 1 << 22, 1 << 25))
+    for bs, bw in mem.items():
+        stressors.append(StressorResult(f"mem_{bs}", "memory", bw, "bytes/s"))
+    link = link_sweep((1 << 12, 1 << 18) if quick else
+                      (1 << 10, 1 << 14, 1 << 18, 1 << 22))
+    for n, (lat, bw) in link.items():
+        stressors.append(StressorResult(f"link_{n}", "link", bw,
+                                        f"lat={lat*1e6:.1f}us"))
+    lats = [v[0] for v in link.values()]
+    bws = [v[1] for v in link.values()]
+    return SidecarProfile(
+        sidecar_matmul_flops=mm_flops,
+        sidecar_mem_bw=max(v for v in mem.values()),
+        link_lat=min(lats),
+        link_bw=max(bws),
+        stressors=stressors,
+    )

@@ -1,0 +1,118 @@
+"""Placement cost model — the paper's guidelines as executable policy (G4).
+
+The paper's central negative result (Fig 14): an off-path sidecar placed on
+the critical data path strictly loses, because every touch pays the full
+link + stack overhead.  Its positive results: dedicated accelerators win
+(Table 3), and *asynchronous background* offload wins by freeing host cycles
+(Figs 6/8) even though the sidecar is slower in absolute terms.
+
+``decide`` encodes exactly that calculus:
+  * ACCELERATOR when a dedicated unit supports the op (G1);
+  * SIDECAR_ASYNC for off-critical-path work whose sustained rate fits the
+    sidecar + link budget (G2) — note the sidecar being N x slower does NOT
+    disqualify it, only queue saturation does;
+  * DEVICE whenever the task is on the critical path and the round-trip link
+    cost exceeds the device-side cost (G4 — the Xenic-cache rejection);
+  * SIDECAR_SYNC only in the rare case link+sidecar actually beats the device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from repro.core.characterize import (
+    DCN_BW, DCN_LAT, SidecarProfile, TPU_PCIE_BW, TPU_PCIE_LAT)
+
+
+class Placement(enum.Enum):
+    DEVICE = "device"
+    ACCELERATOR = "accelerator"
+    SIDECAR_ASYNC = "sidecar_async"
+    SIDECAR_SYNC = "sidecar_sync"
+    REJECTED = "rejected"
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskProfile:
+    """A unit of work considered for offload."""
+    name: str
+    flops: float                      # arithmetic work per invocation
+    bytes_in: float                   # device->sidecar traffic if offloaded
+    bytes_out: float                  # sidecar->device traffic if offloaded
+    on_critical_path: bool
+    period_s: float = 0.0             # how often it runs (0 = one-shot)
+    accelerator_supported: bool = False
+    accelerator_speedup: float = 5.0  # vs device general-purpose path
+    memory_bytes: float = 0.0         # resident bytes if sidecar-hosted (G3)
+
+
+@dataclasses.dataclass
+class Decision:
+    placement: Placement
+    est_device_s: float
+    est_sidecar_s: float              # compute+link, as if synchronous
+    est_link_s: float
+    rationale: str
+
+
+class CostModel:
+    def __init__(self, profile: SidecarProfile,
+                 pcie_bw: float = TPU_PCIE_BW, pcie_lat: float = TPU_PCIE_LAT):
+        self.p = profile
+        self.pcie_bw = pcie_bw
+        self.pcie_lat = pcie_lat
+
+    # -- primitive estimators ------------------------------------------------
+    def device_time(self, t: TaskProfile) -> float:
+        return t.flops / self.p.accel_flops + \
+            (t.bytes_in + t.bytes_out) / self.p.accel_mem_bw
+
+    def sidecar_compute_time(self, t: TaskProfile) -> float:
+        return t.flops / max(self.p.sidecar_matmul_flops, 1.0) + \
+            (t.bytes_in + t.bytes_out) / max(self.p.sidecar_mem_bw, 1.0)
+
+    def link_time(self, t: TaskProfile) -> float:
+        return 2 * self.pcie_lat + (t.bytes_in + t.bytes_out) / self.pcie_bw
+
+    def replication_time(self, nbytes: float, n_peers: int) -> float:
+        """Sidecar->peer-endpoint fanout (the Redis-replication analog)."""
+        return DCN_LAT + n_peers * nbytes / DCN_BW
+
+    # -- the guideline logic ---------------------------------------------------
+    def decide(self, t: TaskProfile) -> Decision:
+        dev = self.device_time(t)
+        link = self.link_time(t)
+        side = self.sidecar_compute_time(t) + link
+
+        if t.accelerator_supported:
+            return Decision(
+                Placement.ACCELERATOR, dev, side, link,
+                f"G1: dedicated accelerator supports {t.name!r} "
+                f"(~{t.accelerator_speedup:.1f}x general-purpose path)")
+
+        if not t.on_critical_path:
+            rate_ok = t.period_s == 0.0 or \
+                self.sidecar_compute_time(t) + link < t.period_s
+            if rate_ok:
+                return Decision(
+                    Placement.SIDECAR_ASYNC, dev, side, link,
+                    "G2: latency-insensitive background work; sidecar absorbs "
+                    f"it off the step path (sustained {side:.2e}s/invocation "
+                    f"< period {t.period_s:.2e}s)" if t.period_s else
+                    "G2: latency-insensitive background work; offloaded async")
+            return Decision(
+                Placement.DEVICE, dev, side, link,
+                f"G2-overload: sidecar cannot sustain rate "
+                f"({side:.2e}s/invocation > period {t.period_s:.2e}s); "
+                "kept on device to avoid unbounded queue growth")
+
+        # critical path: the G4 rejection test
+        if side < dev:
+            return Decision(
+                Placement.SIDECAR_SYNC, dev, side, link,
+                "sidecar+link genuinely beats device — rare but allowed")
+        return Decision(
+            Placement.DEVICE, dev, side, link,
+            f"G4: critical-path offload rejected — link+sidecar {side:.2e}s "
+            f">= device {dev:.2e}s (the off-path-cache anti-pattern)")

@@ -1,0 +1,173 @@
+"""Sidecar-as-endpoint (paper G3): host DRAM/storage as independent resources.
+
+Three facilities:
+
+  * ``HostMemoryPool`` — capacity-accounted host-DRAM tensor store: the
+    sidecar's 16GB-DRAM-analog.  Used for host-resident optimizer master
+    state / parameter shards with explicit prefetch (``to_device``).
+  * ``PeerEndpoint`` / ``EndpointRegistry`` — each host in the pod is an
+    independently-addressable endpoint (the SmartNIC's "own IP" property).
+    Used as checkpoint-replication targets; on this container peers are
+    directories, on a real pod they are DCN addresses — the interface is the
+    deliberately narrow part.
+  * ``ShardedStore`` — hash-sharding across endpoints (the paper's Redis
+    16384-hash-slot scheme, §4.3) for host-side data/state placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import zlib
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+NUM_SLOTS = 16384  # the paper's Redis hash-slot count
+
+
+# ----------------------------------------------------------------------------
+# Host memory expansion
+# ----------------------------------------------------------------------------
+
+class HostMemoryPool:
+    """Capacity-accounted host tensor store with device prefetch."""
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity = capacity_bytes
+        self.used = 0
+        self._store: Dict[str, np.ndarray] = {}
+        self._lock = threading.Lock()
+
+    def put(self, name: str, value) -> None:
+        arr = np.asarray(jax.device_get(value))
+        with self._lock:
+            old = self._store.get(name)
+            delta = arr.nbytes - (old.nbytes if old is not None else 0)
+            if self.used + delta > self.capacity:
+                raise MemoryError(
+                    f"host pool over capacity: {self.used + delta} > "
+                    f"{self.capacity} storing {name!r}")
+            self._store[name] = arr
+            self.used += delta
+
+    def get(self, name: str) -> np.ndarray:
+        with self._lock:
+            return self._store[name]
+
+    def to_device(self, name: str, sharding=None) -> jax.Array:
+        """Explicit prefetch back to HBM (the G4-aware part: callers schedule
+        this off the critical path, ahead of use)."""
+        host = self.get(name)
+        return jax.device_put(host, sharding) if sharding is not None \
+            else jax.device_put(host)
+
+    def delete(self, name: str) -> None:
+        with self._lock:
+            arr = self._store.pop(name, None)
+            if arr is not None:
+                self.used -= arr.nbytes
+
+    def offload_tree(self, prefix: str, tree: Any) -> List[str]:
+        names = []
+        for i, leaf in enumerate(jax.tree.leaves(tree)):
+            name = f"{prefix}/{i}"
+            self.put(name, leaf)
+            names.append(name)
+        return names
+
+    def fetch_tree(self, prefix: str, treedef_like: Any) -> Any:
+        leaves = [self.to_device(f"{prefix}/{i}")
+                  for i in range(len(jax.tree.leaves(treedef_like)))]
+        return jax.tree.unflatten(jax.tree.structure(treedef_like), leaves)
+
+
+# ----------------------------------------------------------------------------
+# Peer endpoints (replication targets)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PeerEndpoint:
+    """One addressable peer.  Directory-backed here; DCN-backed on a pod."""
+    name: str
+    root: str
+
+    def write(self, rel_path: str, data: bytes) -> None:
+        path = os.path.join(self.root, rel_path)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+
+    def read(self, rel_path: str) -> bytes:
+        with open(os.path.join(self.root, rel_path), "rb") as f:
+            return f.read()
+
+    def exists(self, rel_path: str) -> bool:
+        return os.path.exists(os.path.join(self.root, rel_path))
+
+
+class EndpointRegistry:
+    def __init__(self):
+        self._peers: Dict[str, PeerEndpoint] = {}
+
+    def register(self, peer: PeerEndpoint) -> None:
+        self._peers[peer.name] = peer
+
+    def peers(self) -> List[PeerEndpoint]:
+        return list(self._peers.values())
+
+    def get(self, name: str) -> PeerEndpoint:
+        return self._peers[name]
+
+    @staticmethod
+    def local_peers(base_dir: str, n: int) -> "EndpointRegistry":
+        reg = EndpointRegistry()
+        for i in range(n):
+            root = os.path.join(base_dir, f"peer{i}")
+            os.makedirs(root, exist_ok=True)
+            reg.register(PeerEndpoint(f"peer{i}", root))
+        return reg
+
+
+# ----------------------------------------------------------------------------
+# Hash sharding across endpoints (paper §4.3)
+# ----------------------------------------------------------------------------
+
+def hash_slot(key: bytes, num_slots: int = NUM_SLOTS) -> int:
+    """CRC16-mod-slots in the paper; CRC32 here — same structure."""
+    return zlib.crc32(key) % num_slots
+
+
+class ShardedStore:
+    """Non-overlapping key shards across N endpoints — the host+SmartNIC
+    Redis-sharding case study generalized to N sidecar endpoints."""
+
+    def __init__(self, endpoints: List[Any], num_slots: int = NUM_SLOTS):
+        if not endpoints:
+            raise ValueError("need at least one endpoint")
+        self.endpoints = endpoints
+        self.num_slots = num_slots
+        # slot -> endpoint index (contiguous ranges, like Redis cluster)
+        per = num_slots / len(endpoints)
+        self.slot_owner = [min(int(s / per), len(endpoints) - 1)
+                           for s in range(num_slots)]
+
+    def owner(self, key: str) -> int:
+        return self.slot_owner[hash_slot(key.encode())]
+
+    def put(self, key: str, value: Any) -> int:
+        i = self.owner(key)
+        self.endpoints[i][key] = value
+        return i
+
+    def get(self, key: str) -> Any:
+        return self.endpoints[self.owner(key)][key]
+
+    def balance(self) -> List[int]:
+        counts = [0] * len(self.endpoints)
+        for s in range(self.num_slots):
+            counts[self.slot_owner[s]] += 1
+        return counts

@@ -1,0 +1,178 @@
+"""Background sidecar executor — paper G2 as infrastructure.
+
+Runs latency-insensitive work (checkpoint serialization, peer replication,
+metrics, log processing) on host threads so the device step loop never
+blocks.  Properties the paper's doctrine requires:
+
+  * **Non-blocking submit** with device->host staging inside the worker
+    (``jax.device_get`` happens on the sidecar thread, after an async
+    host-copy enqueue on the main thread when possible).
+  * **Bounded queue + backpressure policy** — an overloaded sidecar must not
+    grow unbounded (the cost model's G2-overload case); policies: "block"
+    (checkpoints — correctness), "drop_oldest" (metrics — lossy ok).
+  * **Failure isolation** — a sidecar task failure (e.g. a flaky replication
+    peer) is recorded and retried; it never propagates into the step loop.
+    This is the fault-tolerance contract: background-plane failures are
+    soft-degradations, not training failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    name: str
+    submitted_at: float
+    started_at: float = 0.0
+    finished_at: float = 0.0
+    error: Optional[str] = None
+    retries: int = 0
+
+    @property
+    def wait_s(self) -> float:
+        return (self.started_at or time.time()) - self.submitted_at
+
+    @property
+    def run_s(self) -> float:
+        return max(0.0, self.finished_at - self.started_at)
+
+
+class _Task:
+    __slots__ = ("name", "fn", "args", "record", "done", "result", "max_retries")
+
+    def __init__(self, name, fn, args, max_retries):
+        self.name = name
+        self.fn = fn
+        self.args = args
+        self.record = TaskRecord(name, time.time())
+        self.done = threading.Event()
+        self.result = None
+        self.max_retries = max_retries
+
+
+class BackgroundExecutor:
+    """Thread-pool sidecar with bounded queue and failure isolation."""
+
+    def __init__(self, num_threads: int = 2, max_inflight: int = 4,
+                 backpressure: str = "block", max_retries: int = 2):
+        assert backpressure in ("block", "drop_oldest", "reject")
+        self.backpressure = backpressure
+        self.max_retries = max_retries
+        self._q: "queue.Queue[_Task]" = queue.Queue(maxsize=max_inflight)
+        self._history: List[TaskRecord] = []
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._dropped = 0
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"sidecar-{i}")
+            for i in range(num_threads)]
+        for t in self._threads:
+            t.start()
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, name: str, fn: Callable, *arrays: Any) -> _Task:
+        """Non-blocking (subject to backpressure policy).  ``arrays`` may be
+        jax Arrays — host staging happens on the worker thread."""
+        for a in arrays:
+            if isinstance(a, jax.Array):
+                try:
+                    a.copy_to_host_async()
+                except Exception:
+                    pass
+        task = _Task(name, fn, arrays, self.max_retries)
+        while True:
+            try:
+                self._q.put_nowait(task)
+                return task
+            except queue.Full:
+                if self.backpressure == "block":
+                    self._q.put(task)
+                    return task
+                if self.backpressure == "reject":
+                    task.record.error = "rejected: queue full"
+                    task.done.set()
+                    with self._lock:
+                        self._dropped += 1
+                        self._history.append(task.record)
+                    return task
+                # drop_oldest
+                try:
+                    old = self._q.get_nowait()
+                    old.record.error = "dropped: backpressure"
+                    old.done.set()
+                    with self._lock:
+                        self._dropped += 1
+                        self._history.append(old.record)
+                except queue.Empty:
+                    pass
+
+    def _worker(self):
+        while not self._stop.is_set():
+            try:
+                task = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            task.record.started_at = time.time()
+            host_args = []
+            try:
+                for a in task.args:
+                    host_args.append(jax.device_get(a)
+                                     if isinstance(a, jax.Array) else a)
+            except Exception as e:  # staging failure
+                task.record.error = f"staging: {e}"
+            if task.record.error is None:
+                for attempt in range(task.max_retries + 1):
+                    try:
+                        task.result = task.fn(*host_args)
+                        task.record.error = None
+                        break
+                    except Exception as e:
+                        task.record.error = \
+                            f"{type(e).__name__}: {e}"
+                        task.record.retries = attempt
+            task.record.finished_at = time.time()
+            task.done.set()
+            with self._lock:
+                self._history.append(task.record)
+            self._q.task_done()
+
+    # -- introspection / lifecycle ----------------------------------------------
+    def drain(self, timeout: float = 30.0) -> bool:
+        """Wait for all submitted work (checkpoint barrier at shutdown)."""
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            if self._q.unfinished_tasks == 0:
+                return True
+            time.sleep(0.01)
+        return False
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            hist = list(self._history)
+            dropped = self._dropped
+        ok = [r for r in hist if r.error is None]
+        failed = [r for r in hist if r.error is not None]
+        return {
+            "completed": len(ok),
+            "failed": len(failed),
+            "dropped": dropped,
+            "mean_wait_s": sum(r.wait_s for r in ok) / len(ok) if ok else 0.0,
+            "mean_run_s": sum(r.run_s for r in ok) / len(ok) if ok else 0.0,
+            "errors": [r.error for r in failed][:8],
+        }
+
+    def shutdown(self, drain: bool = True):
+        if drain:
+            self.drain()
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)

@@ -1,0 +1,97 @@
+"""Offload planner: characterize once, place every auxiliary task (G1-G4).
+
+The Trainer/Engine hand the planner their auxiliary task inventory
+(checkpoint save, peer replication, metrics, eval, data prefetch, hot-path
+ops); the planner runs each through the cost model and emits an
+``OffloadPlan`` that the runtime enforces.  ``to_table()`` makes every
+placement decision and its rationale visible — the paper is a guidelines
+paper, so the *explainability* of placements is a first-class output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.config.run import OffloadConfig
+from repro.core.characterize import SidecarProfile, characterize
+from repro.core.costmodel import CostModel, Decision, Placement, TaskProfile
+
+
+@dataclasses.dataclass
+class OffloadPlan:
+    decisions: Dict[str, Decision]
+    profile: SidecarProfile
+
+    def placement(self, task: str) -> Placement:
+        return self.decisions[task].placement
+
+    def to_table(self) -> str:
+        rows = [f"{'task':28s} {'placement':14s} rationale"]
+        for name, d in sorted(self.decisions.items()):
+            rows.append(f"{name:28s} {d.placement.value:14s} {d.rationale}")
+        return "\n".join(rows)
+
+
+# Default auxiliary-task inventory for a training loop.  flops/bytes are
+# per-invocation estimates filled in from the model size at plan time.
+def training_task_inventory(param_bytes: float, step_period_s: float,
+                            n_replicas: int) -> List[TaskProfile]:
+    return [
+        TaskProfile("checkpoint_serialize", flops=0.0,
+                    bytes_in=param_bytes, bytes_out=0.0,
+                    on_critical_path=False, period_s=step_period_s * 50),
+        TaskProfile("checkpoint_replicate", flops=0.0,
+                    bytes_in=param_bytes * n_replicas, bytes_out=0.0,
+                    on_critical_path=False, period_s=step_period_s * 50),
+        TaskProfile("metrics_aggregate", flops=1e3,
+                    bytes_in=4e3, bytes_out=0.0,
+                    on_critical_path=False, period_s=step_period_s),
+        TaskProfile("log_processing", flops=1e6, bytes_in=1e5, bytes_out=0.0,
+                    on_critical_path=False, period_s=step_period_s),
+        TaskProfile("data_prefetch", flops=0.0, bytes_in=0.0, bytes_out=1e8,
+                    on_critical_path=False, period_s=step_period_s),
+        TaskProfile("background_eval", flops=1e12, bytes_in=0.0, bytes_out=1e4,
+                    on_critical_path=False, period_s=step_period_s * 500),
+        # hot-path entries: these exist to show G1/G4 working
+        TaskProfile("attention_hotspot", flops=1e12, bytes_in=0, bytes_out=0,
+                    on_critical_path=True, accelerator_supported=True),
+        TaskProfile("activation_host_cache", flops=0.0,
+                    bytes_in=1e8, bytes_out=1e8, on_critical_path=True),
+    ]
+
+
+class OffloadPlanner:
+    def __init__(self, ocfg: OffloadConfig,
+                 profile: Optional[SidecarProfile] = None):
+        self.ocfg = ocfg
+        self.profile = profile or characterize(quick=True)
+        self.cost_model = CostModel(self.profile)
+
+    def plan(self, tasks: List[TaskProfile]) -> OffloadPlan:
+        decisions: Dict[str, Decision] = {}
+        for t in tasks:
+            if not self.ocfg.use_accelerators and t.accelerator_supported:
+                t = dataclasses.replace(t, accelerator_supported=False)
+            if self.ocfg.enforce_cost_model:
+                d = self.cost_model.decide(t)
+            else:
+                # naive mode (what the paper warns against): offload anything
+                d = Decision(
+                    Placement.SIDECAR_SYNC if t.on_critical_path
+                    else Placement.SIDECAR_ASYNC,
+                    self.cost_model.device_time(t),
+                    self.cost_model.sidecar_compute_time(t),
+                    self.cost_model.link_time(t),
+                    "cost model DISABLED — naive offload (for A/B benches)")
+            if not self.ocfg.background_offload and \
+                    d.placement == Placement.SIDECAR_ASYNC:
+                d = dataclasses.replace(
+                    d, placement=Placement.DEVICE,
+                    rationale="background offload disabled by config")
+            decisions[t.name] = d
+        return OffloadPlan(decisions, self.profile)
+
+    def plan_training(self, param_bytes: float, step_period_s: float = 1.0,
+                      n_replicas: int = 3) -> OffloadPlan:
+        return self.plan(training_task_inventory(
+            param_bytes, step_period_s, n_replicas))

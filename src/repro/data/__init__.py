@@ -1,0 +1,8 @@
+from repro.data.memmap import TokenFileDataset, write_token_file
+from repro.data.pipeline import PrefetchLoader, device_put_batch
+from repro.data.synthetic import SyntheticConfig, SyntheticLMDataset, batches
+
+__all__ = [
+    "TokenFileDataset", "write_token_file", "PrefetchLoader",
+    "device_put_batch", "SyntheticConfig", "SyntheticLMDataset", "batches",
+]

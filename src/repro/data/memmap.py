@@ -1,0 +1,38 @@
+"""Token-file-backed dataset (np.memmap): the production input format.
+
+A corpus is a flat int32 token file; examples are fixed-stride windows.
+Host-sharding (G3: each host endpoint serves its own non-overlapping shard)
+is by window index modulo num_shards — the same hash-slot doctrine as
+core.endpoint.ShardedStore, specialized to sequential windows.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict
+
+import numpy as np
+
+
+def write_token_file(path: str, tokens: np.ndarray) -> None:
+    tokens.astype(np.int32).tofile(path)
+
+
+class TokenFileDataset:
+    def __init__(self, path: str, seq_len: int):
+        self.path = path
+        self.seq_len = seq_len
+        n_tokens = os.path.getsize(path) // 4
+        self.tokens = np.memmap(path, np.int32, "r", shape=(n_tokens,))
+        self.num_examples = max((n_tokens - 1) // seq_len, 0)
+
+    def example(self, idx: int) -> Dict[str, np.ndarray]:
+        s = idx * self.seq_len
+        window = np.asarray(self.tokens[s:s + self.seq_len + 1])
+        return {
+            "tokens": window[:-1].astype(np.int32),
+            "targets": window[1:].astype(np.int32),
+            "loss_mask": np.ones(self.seq_len, np.float32),
+        }
+
+    def shard_examples(self, shard: int, num_shards: int):
+        return range(shard, self.num_examples, num_shards)

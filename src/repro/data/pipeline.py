@@ -1,0 +1,67 @@
+"""Input pipeline: host-sharded iteration + sidecar background prefetch (G2).
+
+``PrefetchLoader`` keeps ``depth`` batches in flight: batch assembly (host
+work) runs on the sidecar executor while the device is inside the previous
+step; the main thread only ever blocks when the device outruns the sidecar,
+which the stats surface (the cost model's G2-overload signal, observable).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.core.executor import BackgroundExecutor
+
+
+class PrefetchLoader:
+    def __init__(self, batch_iter: Iterator[Dict[str, np.ndarray]],
+                 depth: int = 2,
+                 put_fn: Optional[Callable[[Any], Any]] = None):
+        self._iter = batch_iter
+        self._depth = depth
+        self._put = put_fn or (lambda x: x)
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.stalls = 0          # device waited on sidecar
+        self._t = threading.Thread(target=self._pump, daemon=True,
+                                   name="data-prefetch")
+        self._t.start()
+
+    def _pump(self):
+        try:
+            for b in self._iter:
+                if self._stop.is_set():
+                    return
+                self._q.put(self._put(b))
+        except StopIteration:
+            pass
+        self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._q.empty():
+            self.stalls += 1
+        item = self._q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def device_put_batch(batch: Dict[str, np.ndarray], shardings=None):
+    if shardings is None:
+        return jax.tree.map(jax.device_put, batch)
+    return jax.tree.map(jax.device_put, batch, shardings)

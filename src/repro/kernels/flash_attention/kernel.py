@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (GQA, causal, sliding-window).
+
+TPU adaptation of the GPU flash algorithm (per DESIGN.md §2: rethink, don't
+port): no warps/shared-memory — instead the (bq x N) query block and the
+running (m, l, acc) live in VMEM scratch across the sequential minor grid
+dimension, and the (bq x bk) score matmuls are MXU-shaped.  The kv-block loop
+is the minor grid axis because TPU grids execute the minor axis sequentially
+per core, which is what makes scratch-carried online softmax legal.
+
+Layouts: q (BH, S, N), k/v (BJ, T, N) — the GQA group mapping (q head ->
+kv head) happens in the index_map, so kv blocks are fetched once per group.
+
+Masking is positional (train/prefill: row i attends to col t <= i, within
+``window`` when set).  KV blocks fully outside the causal/window band are
+predicated off with ``pl.when`` — the MXU work for those blocks is skipped
+(the TPU analog of GPU block pruning).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, nk: int, causal: bool, window: int,
+                  scale: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    live = jnp.bool_(True)
+    if causal:                      # skip blocks strictly above the diagonal
+        live = k_start <= q_start + bq - 1
+    if window > 0:                  # skip blocks strictly left of the band
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (bq, N)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, N)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq,bk)
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kp <= qp
+        if window > 0:
+            mask &= kp > qp - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsn(
+    q: jax.Array,          # (BH, S, N)
+    k: jax.Array,          # (BJ, T, N)
+    v: jax.Array,          # (BJ, T, N)
+    *,
+    group: int,            # H // J (GQA group size)
+    causal: bool = True,
+    window: int = 0,
+    scale: float = 1.0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, N = q.shape
+    nq, nk = S // bq, k.shape[1] // bk
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, causal=causal, window=window,
+        scale=scale)
+
+    def q_map(bh, iq, ik):
+        return (bh, iq, 0)
+
+    def kv_map(bh, iq, ik):
+        return (bh // group, ik, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, N), q_map),
+            pl.BlockSpec((1, bk, N), kv_map),
+            pl.BlockSpec((1, bk, N), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, N), q_map),
+        out_shape=jax.ShapeDtypeStruct((BH, S, N), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

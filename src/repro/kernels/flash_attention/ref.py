@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel (general-purpose path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, group: int, causal: bool = True,
+                  window: int = 0, scale: float = 1.0) -> jax.Array:
+    """q (BH,S,N), k/v (BJ,T,N) -> (BH,S,N). Direct softmax attention."""
+    BH, S, N = q.shape
+    BJ, T, _ = k.shape
+    kx = jnp.repeat(k, group, axis=0)      # expand kv heads to q heads
+    vx = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hsn,htn->hst", q.astype(jnp.float32) * scale,
+                   kx.astype(jnp.float32))
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hst,htn->hsn", p, vx.astype(jnp.float32)).astype(q.dtype)

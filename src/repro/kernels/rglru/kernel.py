@@ -1,0 +1,61 @@
+"""Pallas TPU blocked linear-recurrence scan: h_t = a_t * h_{t-1} + b_t.
+
+TPU adaptation of the RG-LRU recurrence (recurrentgemma): the channel axis is
+tiled onto VPU lanes (bw = multiple of 128) and the carry h lives in VMEM
+scratch across the sequential time-block grid axis.  Inside a block the scan
+is a lane-parallel ``fori_loop`` over bs timesteps — sequential in time,
+vectorized over channels, which matches the dependency structure (time is the
+only serial dimension).
+
+Grid: (B, W/bw, S/bs); the time axis is the MINOR grid dim (sequential on
+TPU) so the scratch-carried h is legal, and each (batch, channel-tile) pair
+re-initializes the carry when the time index wraps to 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, o_ref, h_scr, *, bs: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, h):
+        a_t = a_ref[0, t, :]
+        b_t = b_ref[0, t, :]
+        h = a_t * h + b_t
+        o_ref[0, t, :] = h
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, bs, step, h_scr[...])
+
+
+def linear_scan_pallas(a: jax.Array, b: jax.Array, *, bs: int = 128,
+                       bw: int = 512, interpret: bool = False) -> jax.Array:
+    """a, b: (B, S, W) f32 -> h (B, S, W)."""
+    B, S, W = a.shape
+    bs = min(bs, S)
+    bw = min(bw, W)
+    grid = (B, W // bw, S // bs)
+
+    def imap(ib, iw, it):
+        return (ib, it, iw)
+
+    spec = pl.BlockSpec((1, bs, bw), imap)
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, bs=bs),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the RWKV6 kernel: the sequential recurrence."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.rwkv6 import rwkv6_recurrence_ref
+
+
+def rwkv6_ref(r, k, v, w, u):
+    """r,k,v,w: (B,T,H,N) f32; u (H,N). Returns y (B,T,H,N)."""
+    y, _ = rwkv6_recurrence_ref(r, k, v, w, u)
+    return y

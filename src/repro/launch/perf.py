@@ -1,0 +1,143 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing runner: named variants of the three chosen cells.
+
+Each experiment is a (cell, variant) pair; variants patch the model config,
+the exec policy, or the mesh shape.  Results land in artifacts/perf/ and the
+before/after log goes into EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m repro.launch.perf --exp all
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict
+
+import jax
+
+from repro.launch.dryrun import DEFAULT_POLICY, run_cell
+from repro.launch.roofline import analyze
+
+# (arch, shape, cfg_patch, policy_patch, mesh_shape)
+EXPERIMENTS: Dict[str, Dict[str, Any]] = {
+    # -- cell A: olmoe-1b-7b train_4k — worst roofline fraction (0.7%) -------
+    "olmoe/base": dict(arch="olmoe-1b-7b", shape="train_4k"),
+    "olmoe/batched_dispatch": dict(
+        arch="olmoe-1b-7b", shape="train_4k",
+        cfg_patch={"moe_dispatch": "batched"}),
+    "olmoe/batched+tp8": dict(
+        arch="olmoe-1b-7b", shape="train_4k",
+        cfg_patch={"moe_dispatch": "batched"},
+        mesh_shape={"data": 32, "model": 8}),
+    "olmoe/batched+tp4": dict(
+        arch="olmoe-1b-7b", shape="train_4k",
+        cfg_patch={"moe_dispatch": "batched"},
+        mesh_shape={"data": 64, "model": 4}),
+    "olmoe/batched+tp2": dict(
+        arch="olmoe-1b-7b", shape="train_4k",
+        cfg_patch={"moe_dispatch": "batched"},
+        mesh_shape={"data": 128, "model": 2}),
+    "olmoe/batched+ep_repl": dict(
+        arch="olmoe-1b-7b", shape="train_4k",
+        cfg_patch={"moe_dispatch": "batched",
+                   "moe_expert_sharding": "replicate"}),
+    "olmoe/batched+ep_repl+tp4": dict(
+        arch="olmoe-1b-7b", shape="train_4k",
+        cfg_patch={"moe_dispatch": "batched",
+                   "moe_expert_sharding": "replicate"},
+        mesh_shape={"data": 64, "model": 4}),
+
+    # -- cell B: rwkv6-3b prefill_32k — most collective-bound (222x) ---------
+    "rwkv/base": dict(arch="rwkv6-3b", shape="prefill_32k"),
+    "rwkv/constrained": dict(
+        arch="rwkv6-3b", shape="prefill_32k",
+        policy_patch={"constrain_recurrence": True}),
+    "rwkv/constrained+tp4": dict(
+        arch="rwkv6-3b", shape="prefill_32k",
+        policy_patch={"constrain_recurrence": True},
+        mesh_shape={"data": 64, "model": 4}),
+    "rwkv/constrained+tp8": dict(
+        arch="rwkv6-3b", shape="prefill_32k",
+        policy_patch={"constrain_recurrence": True},
+        mesh_shape={"data": 32, "model": 8}),
+    "rwkv/tp8": dict(
+        arch="rwkv6-3b", shape="prefill_32k",
+        mesh_shape={"data": 32, "model": 8}),
+
+    # -- cell C: gemma-7b train_4k — flagship dense train (paper G1-G4 host) --
+    "gemma/base": dict(arch="gemma-7b", shape="train_4k"),
+    "gemma/tp8": dict(arch="gemma-7b", shape="train_4k",
+                      mesh_shape={"data": 32, "model": 8}),
+    "gemma/tp4": dict(arch="gemma-7b", shape="train_4k",
+                      mesh_shape={"data": 64, "model": 4}),
+    "gemma/tp2": dict(arch="gemma-7b", shape="train_4k",
+                      mesh_shape={"data": 128, "model": 2}),
+    "gemma/tp4_noremat": dict(arch="gemma-7b", shape="train_4k",
+                              policy_patch={"remat": "none"},
+                              mesh_shape={"data": 64, "model": 4}),
+    "gemma/tp2_noremat": dict(arch="gemma-7b", shape="train_4k",
+                              policy_patch={"remat": "none"},
+                              mesh_shape={"data": 128, "model": 2}),
+
+    # -- bonus cells (beyond the required three) ------------------------------
+    "phi/batched": dict(arch="phi3.5-moe-42b-a6.6b", shape="train_4k",
+                        cfg_patch={"moe_dispatch": "batched"}),
+    "phi/batched+tp8": dict(arch="phi3.5-moe-42b-a6.6b", shape="train_4k",
+                            cfg_patch={"moe_dispatch": "batched"},
+                            mesh_shape={"data": 32, "model": 8}),
+    "smollm/dp256": dict(arch="smollm-360m", shape="train_4k",
+                         mesh_shape={"data": 256, "model": 1}),
+}
+
+
+def run_experiment(name: str, outdir: str = "artifacts/perf",
+                   force: bool = False) -> Dict[str, Any]:
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, name.replace("/", "__") + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    spec = EXPERIMENTS[name]
+    policy = DEFAULT_POLICY
+    if spec.get("policy_patch"):
+        policy = dataclasses.replace(policy, **spec["policy_patch"])
+    rec = run_cell(spec["arch"], spec["shape"], "single", policy=policy,
+                   scan_layers=True,
+                   cfg_patch=spec.get("cfg_patch"),
+                   mesh_shape=spec.get("mesh_shape"))
+    rec["experiment"] = name
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    jax.clear_caches()
+    return rec
+
+
+def summarize(rec: Dict[str, Any]) -> str:
+    if rec.get("status") != "ok":
+        return f"{rec.get('experiment','?'):28s} {rec['status']}: " \
+               f"{rec.get('error','')[:90]}"
+    r = analyze(rec)
+    return (f"{rec['experiment']:28s} bound={r['bound_s']:8.3f}s "
+            f"dom={r['dominant']:<10} compute={r['compute_s']:.3f}s "
+            f"mem={r['memory_s']:.3f}s coll={r['collective_s']:.3f}s "
+            f"useful={r['useful_ratio']:.2f} roofline={100*r['roofline_frac']:.1f}%")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--exp", default="all",
+                    help="experiment name, prefix (e.g. 'gemma'), or 'all'")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    names = [n for n in EXPERIMENTS
+             if args.exp in ("all",) or n.startswith(args.exp)]
+    for n in names:
+        t0 = time.time()
+        rec = run_experiment(n, force=args.force)
+        print(f"[{time.time()-t0:5.0f}s] {summarize(rec)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Emit EXPERIMENTS.md markdown tables from dry-run / perf artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report --artifacts artifacts/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.roofline import analyze, load_cells
+
+
+def dryrun_table(artifacts: str, mesh: str) -> str:
+    rows = ["| arch | shape | status | compile_s | flops/dev | bytes/dev | "
+            "coll wire/dev | mem arg+temp (GB/dev) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells(artifacts, mesh):
+        if rec.get("status") == "skip":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | SKIP "
+                        f"(full attention @500k) | — | — | — | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | ERROR | — | — "
+                        f"| — | — | — |")
+            continue
+        m = rec["memory"]
+        gb = (m["argument_bytes"] + m["temp_bytes"]) / 1e9
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | ok | {rec['compile_s']:.0f} "
+            f"| {rec['flops_perdev']:.2e} | {rec['bytes_perdev']:.2e} "
+            f"| {rec.get('collectives', {}).get('wire_bytes', 0):.2e} "
+            f"| {m['argument_bytes']/1e9:.1f}+{m['temp_bytes']/1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(artifacts: str) -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+            "| useful | roofline% | what would move it |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells(artifacts, "single"):
+        r = analyze(rec) if rec.get("status") == "ok" else None
+        if r is None:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {100*r['roofline_frac']:.1f}% | {r['note']} |")
+    return "\n".join(rows)
+
+
+def perf_table(perfdir: str) -> str:
+    rows = ["| experiment | bound_s | dominant | compute_s | memory_s "
+            "| collective_s | useful | roofline% |",
+            "|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(perfdir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec.get('experiment', path)} | ERROR | | | | | | |")
+            continue
+        r = analyze(rec)
+        rows.append(
+            f"| {rec['experiment']} | {r['bound_s']:.3f} | {r['dominant']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['useful_ratio']:.2f} "
+            f"| {100*r['roofline_frac']:.1f}% |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--perf", default="artifacts/perf")
+    ap.add_argument("--which", default="all",
+                    choices=["all", "dryrun", "roofline", "perf", "multi"])
+    args = ap.parse_args()
+    if args.which in ("all", "dryrun"):
+        print("### Dry-run, single-pod (16x16)\n")
+        print(dryrun_table(args.artifacts, "single"))
+    if args.which in ("all", "multi"):
+        print("\n### Dry-run, multi-pod (2x16x16)\n")
+        print(dryrun_table(args.artifacts, "multi"))
+    if args.which in ("all", "roofline"):
+        print("\n### Roofline (single-pod)\n")
+        print(roofline_table(args.artifacts))
+    if args.which in ("all", "perf") and os.path.isdir(args.perf):
+        print("\n### Perf variants\n")
+        print(perf_table(args.perf))
+
+
+if __name__ == "__main__":
+    main()

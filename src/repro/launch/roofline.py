@@ -1,0 +1,122 @@
+"""Roofline analysis from dry-run artifacts (single-pod mesh).
+
+Per (arch x shape) cell, using TPU v5e constants:
+    compute term    = flops_perdev / PEAK_FLOPS
+    memory term     = bytes_perdev / HBM_BW
+    collective term = wire_bytes_perdev / ICI_BW
+(the compiled module is the per-device SPMD program, so cost_analysis values
+are already per-chip; the scan corrections in the artifacts restore while-body
+trip counts — see launch/analytic.py).
+
+Also reports MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (serve), the
+usefulness ratio MODEL_FLOPS / (flops_perdev x chips), the dominant term,
+and a one-line "what would move it" note.
+
+  PYTHONPATH=src python -m repro.launch.roofline --artifacts artifacts/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+
+def load_cells(artifacts: str, mesh: str = "single") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(artifacts, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec.get("num_devices", 256)
+    fl = rec["flops_perdev"]
+    by = rec["bytes_perdev"]
+    co = rec.get("collectives", {}).get("wire_bytes", 0.0)
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_n = co / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    dom = max(terms, key=terms.get)
+    step_time = max(terms.values())            # perfectly-overlapped bound
+    mf = rec["model_flops"]
+    useful = mf / max(fl * chips, 1.0)
+    # roofline fraction: useful work at peak vs bound step time
+    frac = (mf / chips / PEAK_FLOPS) / max(step_time, 1e-12)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom, "bound_s": step_time,
+        "model_flops": mf, "useful_ratio": useful,
+        "roofline_frac": frac,
+        "chips": chips,
+        "note": _note(rec, dom, useful),
+    }
+
+
+def _note(rec: Dict, dom: str, useful: float) -> str:
+    if dom == "compute" and useful < 0.3:
+        return ("compute-bound but <30% useful: kill redundant/replicated "
+                "compute (shard the replicated dims or shrink TP)")
+    if dom == "compute":
+        return "compute-bound: causal block pruning / larger MXU tiles"
+    if dom == "memory":
+        return ("memory-bound: raise arithmetic intensity (bigger per-chip "
+                "batch, fuse elementwise chains, bf16 cache/state)")
+    return ("collective-bound: reshard to cut cross-device traffic, overlap "
+            "collectives with compute, or compress (int8 grads)")
+
+
+def table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':<24}{'shape':<13}{'compute_s':>11}{'memory_s':>11}"
+           f"{'collect_s':>11} {'dominant':<11}{'useful':>8}{'roofl%':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:<24}{r['shape']:<13}{r['compute_s']:>11.3e}"
+            f"{r['memory_s']:>11.3e}{r['collective_s']:>11.3e} "
+            f"{r['dominant']:<11}{r['useful_ratio']:>8.2f}"
+            f"{100*r['roofline_frac']:>7.1f}%")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    skips = []
+    for rec in load_cells(args.artifacts, args.mesh):
+        if rec.get("status") == "skip":
+            skips.append((rec["arch"], rec["shape"], rec.get("reason", "")))
+            continue
+        r = analyze(rec)
+        if r:
+            rows.append(r)
+        else:
+            skips.append((rec["arch"], rec["shape"],
+                          rec.get("error", "error")))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print(table(rows))
+    print(f"\n{len(rows)} analyzed, {len(skips)} skipped/errored")
+    for a, s, why in skips:
+        print(f"  SKIP {a} {s}: {why[:100]}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Training CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch repro-100m --steps 300 \
+      --batch 8 --seq 512 --workdir /tmp/run1 --replicas 3
+
+Any assigned arch id works with --reduced (CPU-feasible smoke config);
+full-size archs are for real pods (this container trains the tiny/100M
+configs end-to-end).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.config import OffloadConfig, TrainConfig, get_config
+from repro.data import SyntheticConfig, SyntheticLMDataset, batches
+from repro.models.transformer import ExecPolicy
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="repro-tiny")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced (smoke) variant of the arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "lion", "sgdm"])
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="peer endpoints for checkpoint replication (G3)")
+    ap.add_argument("--no-offload", action="store_true",
+                    help="disable sidecar background offload (A/B baseline)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(
+        global_batch=args.batch, seq_len=args.seq, steps=args.steps,
+        learning_rate=args.lr, microbatches=args.microbatches,
+        optimizer=args.optimizer, grad_compression=args.compression,
+        ckpt_every=args.ckpt_every, seed=args.seed,
+        warmup_steps=max(args.steps // 20, 5))
+    ocfg = OffloadConfig(background_offload=not args.no_offload,
+                         replica_endpoints=args.replicas)
+
+    trainer = Trainer(cfg, tcfg, ocfg, workdir=args.workdir)
+    print("=== offload plan (paper G1-G4) ===")
+    print(trainer.plan.to_table())
+    ds = SyntheticLMDataset(SyntheticConfig(cfg.vocab_size, args.seq,
+                                            seed=args.seed))
+    out = trainer.run(batches(ds, shard=0, batch=args.batch))
+    print("=== result ===")
+    print(json.dumps({k: v for k, v in out.items() if k != "history"},
+                     indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

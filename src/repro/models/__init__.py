@@ -1,0 +1,8 @@
+from repro.models.transformer import (
+    ExecPolicy, encode, forward, init_decode_state, init_params,
+    logits_from_hidden)
+
+__all__ = [
+    "ExecPolicy", "encode", "forward", "init_decode_state", "init_params",
+    "logits_from_hidden",
+]

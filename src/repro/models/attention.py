@@ -1,0 +1,260 @@
+"""Attention: GQA/MQA/MHA with RoPE, sliding windows, cross-attention, caches.
+
+Two execution paths (paper G1 — accelerator vs general-purpose):
+  * ``attend`` — memory-efficient flash-style pure-jnp attention (scan over
+    q/kv chunks with running max/denominator).  This is simultaneously the
+    Pallas kernel's numerical oracle and the XLA lowering used by the dry-run.
+  * ``repro.kernels.flash_attention.ops.flash_attention`` — the Pallas TPU
+    kernel (BlockSpec VMEM tiling), selected through the accelerator registry
+    when shapes are supported.
+
+Cache layout (per self-attention layer):
+  {"k": (B, C, J, N), "v": (B, C, J, N), "pos": (B, C) int32}
+``C`` is the cache capacity: full context for global attention, the window
+size for sliding-window layers (ring buffer — this is what makes ``long_500k``
+run with constant memory).  ``pos`` holds absolute token positions (-1 =
+empty) so ring overwrites need no extra bookkeeping.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig
+from repro.models.common import normal_init, rope, softcap, split_keys
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, j, n = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kq, kk, kv, ko = split_keys(key, 4)
+    return {
+        "wq": normal_init(kq, (d, h, n), dtype, fan_in=d),
+        "wk": normal_init(kk, (d, j, n), dtype, fan_in=d),
+        "wv": normal_init(kv, (d, j, n), dtype, fan_in=d),
+        "wo": normal_init(ko, (h, n, d), dtype, fan_in=h * n),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Core attention math (flash-style oracle / XLA path)
+# ----------------------------------------------------------------------------
+
+def _scores(q, k, cap: float):
+    # q: (B,S,J,G,N)  k: (B,T,J,N)  ->  (B,J,G,S,T), f32
+    s = jnp.einsum("bsjgn,btjn->bjgst", q, k, preferred_element_type=jnp.float32)
+    return softcap(s, cap)
+
+
+def _direct_attend(q, k, v, mask, cap: float):
+    s = _scores(q, k, cap)
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bjgst,btjn->bsjgn", p.astype(v.dtype), v)
+
+
+def attend(
+    q: jax.Array,            # (B, S, J, G, N) — pre-scaled by 1/sqrt(N)
+    k: jax.Array,            # (B, T, J, N)
+    v: jax.Array,            # (B, T, J, N)
+    q_pos: jax.Array,        # (B, S) int32
+    k_pos: jax.Array,        # (B, T) int32; -1 marks invalid (empty cache slot)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    cap: float = 0.0,
+    q_chunk: int = 0,
+    kv_chunk: int = 0,
+) -> jax.Array:              # (B, S, J, G, N)
+    """Masked attention; chunked (memory-O(chunk²)) when chunk sizes given."""
+    B, S = q.shape[0], q.shape[1]
+    T = k.shape[1]
+
+    def mask_for(qp, kp):
+        m = kp[:, None, :] >= 0
+        if causal:
+            m &= kp[:, None, :] <= qp[:, :, None]
+        if window > 0:
+            m &= kp[:, None, :] > (qp[:, :, None] - window)
+        return m  # (B, s, t)
+
+    if not q_chunk or not kv_chunk or (S <= q_chunk and T <= kv_chunk) \
+            or S % q_chunk or T % kv_chunk:
+        # decode (S==1) and odd shapes: direct — scores stay (B,·,S,T) small
+        return _direct_attend(q, k, v, mask_for(q_pos, k_pos), cap)
+
+    nq, nkv = S // q_chunk, T // kv_chunk
+    kc = k.reshape(B, nkv, kv_chunk, *k.shape[2:]).swapaxes(0, 1)
+    vc = v.reshape(B, nkv, kv_chunk, *v.shape[2:]).swapaxes(0, 1)
+    kpc = k_pos.reshape(B, nkv, kv_chunk).swapaxes(0, 1)
+
+    def q_block(qi, _):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        qpb = jax.lax.dynamic_slice_in_dim(q_pos, qi * q_chunk, q_chunk, axis=1)
+
+        def kv_block(carry, xs):
+            m_run, l_run, acc = carry
+            kb, vb, kpb = xs
+            s = _scores(qb, kb, cap)                       # (B,J,G,s,t) f32
+            msk = mask_for(qpb, kpb)[:, None, None]
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            corr = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bjgst,btjn->bjgsn", p.astype(vb.dtype), vb)
+            acc = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        J, G, N = q.shape[2], q.shape[3], q.shape[4]
+        init = (
+            jnp.full((B, J, G, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((B, J, G, q_chunk), jnp.float32),
+            jnp.zeros((B, J, G, q_chunk, N), jnp.float32),
+        )
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_block, init, (kc, vc, kpc))
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        return qi + 1, out.astype(q.dtype)                 # (B,J,G,s,N)
+
+    _, outs = jax.lax.scan(q_block, 0, None, length=nq)    # (nq,B,J,G,s,N)
+    out = jnp.moveaxis(outs, 0, 3)                         # (B,J,G,nq,s,N)
+    B_, J, G = out.shape[0], out.shape[1], out.shape[2]
+    out = out.reshape(B_, J, G, S, q.shape[4])
+    return out.transpose(0, 3, 1, 2, 4)                    # (B,S,J,G,N)
+
+
+# ----------------------------------------------------------------------------
+# Self-attention layer op (projections + rope + cache + attend)
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> dict:
+    j, n = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, capacity, j, n), dtype),
+        "v": jnp.zeros((batch, capacity, j, n), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def _project_qkv(params, x, positions, cfg: ModelConfig, use_rope: bool = True):
+    h, j, n = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // j if j else 1
+    q = jnp.einsum("bsd,dhn->bshn", x, params["wq"])
+    k = jnp.einsum("bsd,djn->bsjn", x, params["wk"])
+    v = jnp.einsum("bsd,djn->bsjn", x, params["wv"])
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = q.reshape(*q.shape[:2], j, g, n) * (n ** -0.5)
+    return q, k, v
+
+
+def self_attention(
+    params: dict,
+    x: jax.Array,                 # (B, S, D)
+    positions: jax.Array,         # (B, S)
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    causal: bool = True,
+    cache: Optional[dict] = None,
+    q_chunk: int = 0,
+    kv_chunk: int = 0,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Returns (output (B,S,D), updated cache or None)."""
+    q, k, v = _project_qkv(params, x, positions, cfg)
+    if cache is None:
+        if use_kernel:
+            from repro.kernels.flash_attention import ops as fa_ops
+            out = fa_ops.flash_attention(
+                q, k, v, q_pos=positions, k_pos=positions,
+                causal=causal, window=window, cap=cfg.attn_logit_softcap)
+        else:
+            out = attend(q, k, v, positions, positions, causal=causal,
+                         window=window, cap=cfg.attn_logit_softcap,
+                         q_chunk=q_chunk, kv_chunk=kv_chunk)
+        new_cache = None
+    else:
+        cache = cache_write(cache, k, v, positions)
+        out = attend(q, cache["k"], cache["v"], positions, cache["pos"],
+                     causal=causal, window=window, cap=cfg.attn_logit_softcap,
+                     q_chunk=q_chunk, kv_chunk=kv_chunk)
+        new_cache = cache
+    o = jnp.einsum("bsjgn,jgnd->bsd", out,
+                   params["wo"].reshape(cfg.num_kv_heads, -1, cfg.head_dim,
+                                        cfg.d_model))
+    return o, new_cache
+
+
+def cache_write(cache: dict, k: jax.Array, v: jax.Array, positions: jax.Array) -> dict:
+    """Write S new kv entries at slots ``pos % C`` (ring for SWA caches).
+
+    Assumes batch-aligned positions (all rows share positions[0]); this is the
+    batched-serving regime used by serve_step.
+    """
+    C = cache["k"].shape[1]
+    S = k.shape[1]
+    slots = positions[0] % C                     # (S,)
+    if S == 1:
+        slot = slots[0]
+        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_p = jax.lax.dynamic_update_slice(
+            cache["pos"], positions.astype(jnp.int32), (0, slot))
+    else:
+        # prefill: scatter S entries (handles ring wrap when S > C)
+        if S >= C:
+            # keep only the last C tokens (ring semantics)
+            k, v = k[:, -C:], v[:, -C:]
+            positions = positions[:, -C:]
+            slots = positions[0] % C
+        new_k = cache["k"].at[:, slots].set(k)
+        new_v = cache["v"].at[:, slots].set(v)
+        new_p = cache["pos"].at[:, slots].set(positions.astype(jnp.int32))
+    return {"k": new_k, "v": new_v, "pos": new_p}
+
+
+# ----------------------------------------------------------------------------
+# Cross-attention (VLM layers / enc-dec decoder): kv from a memory sequence
+# ----------------------------------------------------------------------------
+
+def init_cross_attention(key, cfg: ModelConfig, dtype) -> dict:
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention(
+    params: dict,
+    x: jax.Array,          # (B, S, D)
+    memory: jax.Array,     # (B, M, D) — patch/frame embeddings or enc output
+    cfg: ModelConfig,
+    *,
+    memory_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Non-causal attention over memory. memory_kv short-circuits projection
+    (decode: kv computed once at prefill and carried in serve state)."""
+    h, j, n = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // j if j else 1
+    q = jnp.einsum("bsd,dhn->bshn", x, params["wq"])
+    q = q.reshape(*q.shape[:2], j, g, n) * (n ** -0.5)
+    if memory_kv is None:
+        k = jnp.einsum("bmd,djn->bmjn", memory, params["wk"])
+        v = jnp.einsum("bmd,djn->bmjn", memory, params["wv"])
+    else:
+        k, v = memory_kv
+    B, S = x.shape[0], x.shape[1]
+    M = k.shape[1]
+    qp = jnp.zeros((B, S), jnp.int32)
+    kp = jnp.zeros((B, M), jnp.int32)
+    out = attend(q, k, v, qp, kp, causal=False, cap=cfg.attn_logit_softcap)
+    o = jnp.einsum("bsjgn,jgnd->bsd", out,
+                   params["wo"].reshape(j, g, n, cfg.d_model))
+    return o, (k, v)

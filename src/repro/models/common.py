@@ -1,0 +1,87 @@
+"""Shared model building blocks: norms, RoPE, initializers, dtype helpers.
+
+All modules are functional: ``init_*`` builds a nested-dict param pytree,
+``apply``-style functions consume it.  Parameter sharding is attached by name
+via ``repro.sharding.rules.logical_axes_for`` (path-based convention), so the
+param trees here carry no sharding metadata themselves.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return jnp.dtype(name)
+
+
+def normal_init(key, shape, dtype, scale: float = 0.02, fan_in: int = 0):
+    if fan_in:
+        scale = fan_in ** -0.5
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# RMSNorm (accelerator-backed: kernels/rmsnorm when enabled)
+# ----------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rms_norm(x: jax.Array, params: dict, eps: float = 1e-6) -> jax.Array:
+    """Computed in f32 regardless of input dtype (TPU numerics practice)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE.  x: (..., S, H, N) with positions (..., S)."""
+    n = x.shape[-1]
+    half = n // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ----------------------------------------------------------------------------
+# Misc
+# ----------------------------------------------------------------------------
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def split_keys(key, n: int):
+    return tuple(jax.random.split(key, n))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def causal_window_mask(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    """(..., S, T) boolean mask: causal, optionally banded by ``window``."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m

@@ -1,0 +1,222 @@
+"""MLP variants: SwiGLU/GeGLU/GELU dense, RWKV channel-mix, and MoE.
+
+MoE uses capacity-based scatter dispatch (static shapes, SPMD-friendly):
+tokens are routed top-k, assigned a slot in an (E·C, D) buffer via a
+cumulative-position scheme, expert-computed with stacked weights sharded on
+the "model" (expert-parallel) axis, then combined with the gate weights.
+Tokens beyond an expert's capacity are dropped (standard capacity-factor
+routing); the aux load-balancing loss keeps drops rare.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig
+from repro.models.common import gelu, normal_init, split_keys
+
+
+# ----------------------------------------------------------------------------
+# Dense MLPs
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.num_experts:
+        return init_moe(key, cfg, dtype)
+    k1, k2, k3 = split_keys(key, 3)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "wi": normal_init(k1, (d, f), dtype, fan_in=d),
+            "wg": normal_init(k2, (d, f), dtype, fan_in=d),
+            "wo": normal_init(k3, (f, d), dtype, fan_in=f),
+        }
+    if cfg.mlp_kind == "gelu":
+        return {
+            "wi": normal_init(k1, (d, f), dtype, fan_in=d),
+            "wo": normal_init(k3, (f, d), dtype, fan_in=f),
+        }
+    if cfg.mlp_kind == "rwkv_cmix":
+        return {
+            "wk": normal_init(k1, (d, f), dtype, fan_in=d),
+            "wv": normal_init(k2, (f, d), dtype, fan_in=f),
+            "wr": normal_init(k3, (d, d), dtype, fan_in=d),
+            "mix_k": jnp.full((d,), 0.5, dtype),
+            "mix_r": jnp.full((d,), 0.5, dtype),
+        }
+    raise ValueError(cfg.mlp_kind)
+
+
+def apply_mlp(params: dict, x: jax.Array, cfg: ModelConfig,
+              shifted: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out, aux_loss). ``shifted`` = token-shifted x for rwkv_cmix."""
+    if cfg.num_experts:
+        return apply_moe(params, x, cfg)
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+        return h @ params["wo"], jnp.zeros((), jnp.float32)
+    if cfg.mlp_kind == "geglu":
+        h = gelu(x @ params["wg"]) * (x @ params["wi"])
+        return h @ params["wo"], jnp.zeros((), jnp.float32)
+    if cfg.mlp_kind == "gelu":
+        return gelu(x @ params["wi"]) @ params["wo"], jnp.zeros((), jnp.float32)
+    if cfg.mlp_kind == "rwkv_cmix":
+        if shifted is None:
+            shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        xk = x + (shifted - x) * params["mix_k"]
+        xr = x + (shifted - x) * params["mix_r"]
+        k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+        return jax.nn.sigmoid(xr @ params["wr"]) * (k @ params["wv"]), \
+            jnp.zeros((), jnp.float32)
+    raise ValueError(cfg.mlp_kind)
+
+
+# ----------------------------------------------------------------------------
+# Mixture of Experts
+# ----------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3, kr = split_keys(key, 4)
+    return {
+        "router": normal_init(kr, (d, e), jnp.float32, fan_in=d),
+        "wi": normal_init(k1, (e, d, f), dtype, fan_in=d),
+        "wg": normal_init(k2, (e, d, f), dtype, fan_in=d),
+        "wo": normal_init(k3, (e, f, d), dtype, fan_in=f),
+    }
+
+
+def _constrain(t, *axes, cfg=None):
+    """Best-effort sharding constraint ('experts_axis' -> 'model' unless the
+    replicate variant is active).  No-op outside a mesh context."""
+    from jax.sharding import PartitionSpec as P
+    resolved = []
+    for ax in axes:
+        if ax == "experts_axis":
+            ax = None if (cfg is not None and
+                          cfg.moe_expert_sharding == "replicate") else "model"
+        resolved.append(ax)
+    try:
+        return jax.lax.with_sharding_constraint(t, P(*resolved))
+    except Exception:
+        return t
+
+
+def moe_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * num_tokens * cfg.experts_per_token
+              / cfg.num_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def apply_moe(params: dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe_dispatch == "batched":
+        return apply_moe_batched(params, x, cfg)
+    return apply_moe_flat(params, x, cfg)
+
+
+def apply_moe_flat(params: dict, x: jax.Array, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based top-k MoE. x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    N = B * S
+    C = moe_capacity(cfg, N)
+    xt = x.reshape(N, D)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                             # (N, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch-style): E * mean(frac_tokens * frac_prob)
+    me = probs.mean(axis=0)                                          # (E,)
+    one_hot_top1 = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # Slot assignment: position of each (token, k) within its expert's queue,
+    # ordered by (k, token). Shape (N*K, E) cumsum -> O(N·K·E) ints.
+    oh = jax.nn.one_hot(idx.T.reshape(-1), E, dtype=jnp.int32)       # (K*N, E)
+    pos = jnp.cumsum(oh, axis=0) - oh                                # pos within expert
+    pos_in_e = (pos * oh).sum(-1).reshape(K, N).T                    # (N, K)
+    keep = pos_in_e < C
+    slot = idx * C + jnp.minimum(pos_in_e, C - 1)                    # (N, K)
+
+    # Dispatch: scatter-add kept tokens into the (E*C, D) buffer.
+    src = (xt[:, None, :] * keep[..., None].astype(x.dtype)).reshape(N * K, D)
+    buf = jnp.zeros((E * C, D), x.dtype).at[slot.reshape(-1)].add(src)
+    buf = buf.reshape(E, C, D)
+
+    # Expert computation (stacked weights; E sharded on the "model" axis = EP).
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"]).reshape(E * C, D)
+
+    # Combine: gather each (token, k) slot's output, weight by gate, zero drops.
+    gathered = out_buf[slot.reshape(-1)].reshape(N, K, D)
+    w = (gate * keep.astype(gate.dtype)).astype(x.dtype)
+    out = jnp.einsum("nkd,nk->nd", gathered, w)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)
+
+
+def apply_moe_batched(params: dict, x: jax.Array, cfg: ModelConfig
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Per-batch-row capacity dispatch: buffers (B, E, C_b, D).
+
+    §Perf hillclimb (beyond the flat baseline): keeping the batch dim on the
+    dispatch buffer lets XLA shard expert compute over data x model instead
+    of concentrating all E*C slots on the expert axis alone — on the MoE
+    dry-run cells this multiplies effective expert-compute parallelism by the
+    data-axis size and removes the data->model scatter crossing.
+    Capacity is per row (C_b = cf*S*K/E), so drop behaviour differs slightly
+    from the flat variant (documented; aux loss keeps drops rare).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = moe_capacity(cfg, S)
+
+    logits = (x.astype(jnp.float32) @ params["router"])             # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                             # (B,S,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=(0, 1))
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # slot assignment per row, ordered by (k, s)
+    idx_t = idx.transpose(0, 2, 1).reshape(B, K * S)                # (B,K*S)
+    oh = jax.nn.one_hot(idx_t, E, dtype=jnp.int32)                  # (B,K*S,E)
+    pos = jnp.cumsum(oh, axis=1) - oh
+    pos_in_e = (pos * oh).sum(-1)                                   # (B,K*S)
+    keep = pos_in_e < C
+    slot = idx_t * C + jnp.minimum(pos_in_e, C - 1)                 # (B,K*S)
+
+    xt = jnp.broadcast_to(x[:, None], (B, K, S, D)).reshape(B, K * S, D)
+    src = xt * keep[..., None].astype(x.dtype)
+    # vmap'd scatter/gather: emits explicit operand-batching dims so SPMD
+    # keeps the buffer sharded on batch (fancy-indexed scatter with an iota
+    # batch index triggers involuntary replication instead)
+    buf = jax.vmap(
+        lambda s_row, sl_row: jnp.zeros((E * C, D), x.dtype)
+        .at[sl_row].add(s_row))(src, slot)
+    buf = buf.reshape(B, E, C, D)
+    buf = _constrain(buf, "data", "experts_axis", None, None, cfg=cfg)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["wg"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, params["wi"])
+    out_buf = jnp.einsum("becf,efd->becd", h, params["wo"]).reshape(B, E * C, D)
+
+    out_buf = _constrain(out_buf.reshape(B, E, C, D), "data",
+                         "experts_axis", None, None,
+                         cfg=cfg).reshape(B, E * C, D)
+    gathered = jax.vmap(lambda ob, sl: ob[sl])(out_buf, slot)       # (B,K*S,D)
+    gathered = _constrain(gathered, "data", None, None, cfg=cfg)
+    gate_t = gate.transpose(0, 2, 1).reshape(B, K * S)
+    w = (gate_t * keep.astype(gate_t.dtype)).astype(x.dtype)
+    out = (gathered * w[..., None]).reshape(B, K, S, D).sum(axis=1)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,129 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block structure (arXiv:2402.19427):
+    y-branch:  y = GeLU(W_y x)
+    x-branch:  u = W_x x ; u = causal depthwise Conv1D(u) ;
+               RG-LRU:  r_t = sigmoid(W_a u_t + b_a)        (recurrence gate)
+                        i_t = sigmoid(W_i u_t + b_i)        (input gate)
+                        log a_t = -c * softplus(Λ) * r_t    (c = 8)
+                        h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+    out = W_o (h ⊙ y)
+
+The linear recurrence h_t = a_t h_{t-1} + b_t is associative, so training uses
+``jax.lax.associative_scan`` (O(log S) depth — this is the TPU adaptation of
+the paper's G1 "dedicated accelerator" doctrine: the Pallas kernel in
+``kernels/rglru`` implements the blocked scan with VMEM-resident carries).
+Decode carries ``h`` as O(1) state, which is why recurrentgemma runs the
+``long_500k`` cell.
+
+Adaptation note: the reference model uses block-diagonal gate matrices
+(num_heads blocks); we use dense W_a/W_i (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig
+from repro.models.common import gelu, normal_init, split_keys
+
+_C = 8.0  # decay sharpness constant from the paper
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    d, w = cfg.d_model, cfg.rglru_width
+    kx, ky, ko, ka, ki, kl, kc = split_keys(key, 7)
+    return {
+        "wx": normal_init(kx, (d, w), dtype, fan_in=d),
+        "wy": normal_init(ky, (d, w), dtype, fan_in=d),
+        "wo": normal_init(ko, (w, d), dtype, fan_in=w),
+        "wa": normal_init(ka, (w, w), dtype, fan_in=w),
+        "ba": jnp.zeros((w,), dtype),
+        "wi": normal_init(ki, (w, w), dtype, fan_in=w),
+        "bi": jnp.zeros((w,), dtype),
+        # Λ init so that a ∈ (0.9, 0.999) at r=1 (paper's init range)
+        "lam": jnp.asarray(
+            jax.random.uniform(kl, (w,), jnp.float32, 0.3, 1.7), dtype),
+        "conv": normal_init(kc, (cfg.rglru_conv_width, w), dtype,
+                            fan_in=cfg.rglru_conv_width),
+    }
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid(u @ params["wa"] + params["ba"])
+    i = jax.nn.sigmoid(u @ params["wi"] + params["bi"])
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * \
+        r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, b  # f32, shapes (..., W)
+
+
+def _causal_conv(u: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. u: (B,S,W), w: (K,W). Returns (out, new_state)
+    where state is the last K-1 inputs (decode carry)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)          # (B, S+K-1, W)
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(K))
+    new_state = full[:, -(K - 1):]
+    return out, new_state
+
+
+def apply_rglru(
+    params: dict,
+    x: jax.Array,                      # (B, S, D)
+    cfg: ModelConfig,
+    state: Optional[dict] = None,      # decode: {"h": (B,W) f32, "conv": (B,K-1,W)}
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    y = gelu(x @ params["wy"])
+    u = x @ params["wx"]
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, params["conv"], conv_state)
+    a, b = _gates(params, u)
+
+    if state is None:
+        if use_kernel:
+            from repro.kernels.rglru import ops as rg_ops
+            h = rg_ops.linear_scan(a, b)
+        else:
+            h = linear_scan_ref(a, b)
+        new_state = None
+    elif x.shape[1] == 1:
+        h_last = a[:, 0] * state["h"] + b[:, 0]        # single decode step
+        new_state = {"h": h_last, "conv": new_conv}
+        h = h_last[:, None]
+    else:
+        # prefill with carried state: h_t = (prod_{j<=t} a_j) h0 + scan_t
+        h = linear_scan_ref(a, b)
+        cum_a = jax.lax.associative_scan(jnp.multiply, a, axis=1)
+        h = h + cum_a * state["h"][:, None, :]
+        new_state = {"h": h[:, -1], "conv": new_conv}
+    out = (h.astype(x.dtype) * y) @ params["wo"]
+    return out, new_state
+
+
+def linear_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1 (f32)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.rglru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, cfg.rglru_width),
+                          jnp.float32),
+    }

@@ -1,0 +1,231 @@
+"""RWKV6 "Finch" time-mix (attention-free, data-dependent decay).
+
+Recurrent form per head (head size N), state S ∈ R^{N×N}:
+    at  = k_tᵀ v_t                       (outer product)
+    y_t = r_t · (S + u ⊙ at)             (u = per-channel "bonus")
+    S  ← diag(w_t) · S + at
+with data-dependent decay w_t = exp(-exp(wd_t)) where wd_t comes from a
+low-rank projection of the token-shift-mixed input (the defining RWKV6
+feature).  Output is per-head group-normed, gated by silu(g), projected.
+
+Adaptation note (DESIGN.md): the reference uses data-dependent lerp (ddlerp)
+for r/k/v/g mixes too; we keep those static (RWKV5-style) and make only the
+decay data-dependent — the O(1)-state recurrence and the roofline-relevant
+compute structure are identical.
+
+Training path: chunked recurrence — ``jax.lax.scan`` over time chunks with an
+intra-chunk parallel form (the Pallas kernel in ``kernels/rwkv6`` implements
+the same chunking with VMEM-resident state).  Decode carries S as O(1) state,
+which is why rwkv6 runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig
+from repro.models.common import normal_init, split_keys
+
+_DECAY_RANK = 64
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    n = cfg.rwkv_head_size
+    h = d // n
+    kr, kk, kv, kg, ko, kw1, kw2 = split_keys(key, 7)
+    return {
+        "wr": normal_init(kr, (d, d), dtype, fan_in=d),
+        "wk": normal_init(kk, (d, d), dtype, fan_in=d),
+        "wv": normal_init(kv, (d, d), dtype, fan_in=d),
+        "wg": normal_init(kg, (d, d), dtype, fan_in=d),
+        "wo": normal_init(ko, (d, d), dtype, fan_in=d),
+        # data-dependent decay: low-rank wd = (x @ w1) @ w2 + bias
+        "wd1": normal_init(kw1, (d, _DECAY_RANK), dtype, fan_in=d),
+        "wd2": normal_init(kw2, (_DECAY_RANK, d), dtype, fan_in=_DECAY_RANK),
+        "decay_bias": jnp.full((d,), -6.0, dtype),   # slow default decay
+        "bonus": jnp.zeros((h, n), dtype),           # u
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype),
+        "mix_g": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "ln_scale": jnp.ones((d,), dtype),           # per-head groupnorm scale
+    }
+
+
+def _mix(x, shifted, mu):
+    return x + (shifted - x) * mu
+
+
+def rwkv6_recurrence_ref(r, k, v, w, u, S0=None):
+    """Reference recurrence. r,k,v,w: (B,T,H,N) f32; u: (H,N).
+    Returns (y: (B,T,H,N), S_final). Sequential scan over T (the oracle)."""
+    B, T, H, N = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                     # (B,H,N)
+        at = kt[..., :, None] * vt[..., None, :]   # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S + u[..., :, None] * at)
+        S = wt[..., :, None] * S + at
+        return S, y
+
+    if S0 is None:
+        S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S_f, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S_f          # (B,T,H,N)
+
+
+def rwkv6_chunked(r, k, v, w, u, chunk: int = 64, S0=None):
+    """Chunked parallel form: O(T/c) sequential steps, parallel inside chunks.
+
+    Within a chunk of length c, with cumulative decays W_t = prod_{s<=t} w_s:
+      intra-chunk: y_t += sum_{s<t} r_t ⊙ (W_t/W_s)-decayed contribution + u-bonus
+      inter-chunk: y_t += r_t · (W_{t-1}-decayed) S_in ; S_out = decayed S_in + sum
+    Returns (y, S_final).
+    """
+    B, T, H, N = r.shape
+    if T % chunk:
+        return rwkv6_recurrence_ref(r, k, v, w, u, S0=S0)
+    nc = T // chunk
+
+    def per_chunk(S, xs):
+        rc, kc, vc, wc = xs                     # (B,c,H,N)
+        logw = jnp.log(jnp.maximum(wc, 1e-30))
+        cum = jnp.cumsum(logw, axis=1)          # log prod_{s<=t}
+        Winc = jnp.exp(cum)                     # decay from chunk start to t (incl.)
+        Wexc = jnp.exp(cum - logw)              # decay up to t-1
+        # inter-chunk: y_inter[t] = (r_t ⊙ Wexc_t) · S
+        y_inter = jnp.einsum("bthn,bhnm->bthm", rc * Wexc, S)
+        # intra-chunk: pairwise s<t decayed attention-like form
+        # A[t,s] = sum_n r_t[n] k_s[n] * Wexc_t[n]/Winc_s[n]   (s < t)
+        rw = rc * Wexc                          # (B,c,H,N)
+        kw = kc / jnp.maximum(Winc, 1e-30)
+        A = jnp.einsum("bthn,bshn->bhts", rw, kw)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhts,bshn->bthn", A, vc)
+        # diagonal bonus term: r_t·(u ⊙ k_t) v_t
+        diag = jnp.einsum("bthn,bthn->bth", rc, u[None, None] * kc)
+        y_diag = diag[..., None] * vc
+        # state update: S' = Winc_last ⊙ S + sum_s (k_s/Winc_s ⊙ Winc_last) v_sᵀ
+        Wlast = Winc[:, -1]                     # (B,H,N)
+        kdec = kw * Wlast[:, None]              # (B,c,H,N)
+        S_new = Wlast[..., None] * S + jnp.einsum("bshn,bshm->bhnm", kdec, vc)
+        return S_new, y_inter + y_intra + y_diag
+
+    if S0 is None:
+        S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    xs = tuple(t.reshape(B, nc, chunk, H, N).swapaxes(0, 1)
+               for t in (r, k, v, w))
+    S_f, ys = jax.lax.scan(per_chunk, S0, xs)   # (nc,B,c,H,N)
+    return ys.swapaxes(0, 1).reshape(B, T, H, N), S_f
+
+
+def _group_norm(y, scale, eps=1e-5):
+    # per-head layernorm over N, then flattened scale over D
+    m = y.mean(-1, keepdims=True)
+    v = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - m) * jax.lax.rsqrt(v + eps)
+    B, T, H, N = y.shape
+    return yn.reshape(B, T, H * N) * scale.astype(y.dtype)
+
+
+def _constrain_batch_only(*ts):
+    """§Perf hillclimb: pin recurrence operands to batch-only sharding.
+
+    The (B,T,H,N) reshape of the model-sharded channel dim (D/16 = 2.5 heads)
+    is inexpressible as an H or N sharding, so XLA re-gathers state/operands
+    EVERY chunk of the scan (the dominant collective cost of the rwkv6
+    prefill cell).  Constraining to P("data", None, None, None) makes the
+    whole scan collective-free: recurrence compute replicates over the model
+    axis (cheap — it is ~7% of step flops) in exchange for zero wire traffic.
+    No-op outside a mesh context.
+    """
+    from jax.sharding import PartitionSpec as P
+    out = []
+    for t in ts:
+        try:
+            t = jax.lax.with_sharding_constraint(
+                t, P("data", *([None] * (t.ndim - 1))))
+        except Exception:  # no mesh / axis absent: leave unconstrained
+            pass
+        out.append(t)
+    return tuple(out)
+
+
+def apply_rwkv6(
+    params: dict,
+    x: jax.Array,                  # (B, S, D)
+    cfg: ModelConfig,
+    state: Optional[dict] = None,  # decode: {"S": (B,H,N,N) f32, "x_prev": (B,D)}
+    use_kernel: bool = False,
+    constrain_recurrence: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    N = cfg.rwkv_head_size
+    H = D // N
+    if state is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = state["x_prev"][:, None].astype(x.dtype)      # (B,1,D)
+        shifted = jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+    r = _mix(x, shifted, params["mix_r"]) @ params["wr"]
+    k = _mix(x, shifted, params["mix_k"]) @ params["wk"]
+    v = _mix(x, shifted, params["mix_v"]) @ params["wv"]
+    g = _mix(x, shifted, params["mix_g"]) @ params["wg"]
+    xw = _mix(x, shifted, params["mix_w"])
+    wd = jnp.tanh(xw @ params["wd1"]) @ params["wd2"] + params["decay_bias"]
+    w = jnp.exp(-jnp.exp(wd.astype(jnp.float32)))          # (B,S,D) in (0,1)
+
+    shape4 = (B, S, H, N)
+    rf, kf, vf = (t.astype(jnp.float32).reshape(shape4) for t in (r, k, v))
+    wf = w.reshape(shape4)
+    u = params["bonus"].astype(jnp.float32)
+
+    if state is None:
+        if constrain_recurrence:
+            rf, kf, vf, wf = _constrain_batch_only(rf, kf, vf, wf)
+        if use_kernel:
+            from repro.kernels.rwkv6 import ops as rk_ops
+            y = rk_ops.rwkv6(rf, kf, vf, wf, u)
+        else:
+            y, _ = rwkv6_chunked(rf, kf, vf, wf, u)
+        if constrain_recurrence:
+            (y,) = _constrain_batch_only(y)
+        new_state = None
+    elif S == 1:
+        Sst = state["S"]
+        at = kf[:, 0, :, :, None] * vf[:, 0, :, None, :]
+        y = jnp.einsum("bhn,bhnm->bhm", rf[:, 0], Sst + u[..., :, None] * at)
+        Sst = wf[:, 0, ..., None] * Sst + at
+        new_state = {"S": Sst, "x_prev": x[:, -1].astype(jnp.float32)}
+        y = y[:, None]
+    else:
+        # prefill with carried state: chunked parallel form (NOT the
+        # per-token scan — at 32k tokens that is 32768 sequential steps and
+        # dominates the serve-prefill roofline; see §Perf rwkv cell)
+        S0 = state["S"]
+        if constrain_recurrence:
+            rf, kf, vf, wf, S0 = _constrain_batch_only(rf, kf, vf, wf, S0)
+        y, S_f = rwkv6_chunked(rf, kf, vf, wf, u, S0=S0)
+        if constrain_recurrence:
+            y, S_f = _constrain_batch_only(y, S_f)
+        new_state = {"S": S_f, "x_prev": x[:, -1].astype(jnp.float32)}
+
+    out = _group_norm(y, params["ln_scale"]).astype(x.dtype)
+    out = out * jax.nn.silu(g)
+    return out @ params["wo"], new_state
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int) -> dict:
+    N = cfg.rwkv_head_size
+    H = cfg.d_model // N
+    return {
+        "S": jnp.zeros((batch, H, N, N), jnp.float32),
+        "x_prev": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }

@@ -1,0 +1,285 @@
+"""Top-level models: decoder-only LM, encoder-decoder, VLM cross-attention.
+
+Layers follow ``cfg.pattern`` repeated; parameters are stored STACKED per
+pattern slot (leading dim = repetitions) in both execution modes:
+
+  * ``scan_layers=True``  — ``lax.scan`` over repetitions (fast compiles;
+    used for smoke tests and the multi-pod compile proof),
+  * ``scan_layers=False`` — python loop indexing the same stacked params
+    (accurate ``cost_analysis`` accounting for the roofline, since XLA counts
+    a while-loop body only once).
+
+Remainder layers (L % len(pattern), e.g. recurrentgemma's 38 = 12x3 + 2) get
+their own unstacked "tail" params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import MIX_ATTN, MIX_ATTN_CROSS, ModelConfig
+from repro.models import blocks as blk
+from repro.models.common import dtype_of, normal_init, rms_norm, init_rmsnorm, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPolicy:
+    """Execution knobs — the §Perf hillclimbing levers."""
+    scan_layers: bool = True
+    q_chunk: int = 0            # 0 -> auto
+    kv_chunk: int = 0
+    use_kernel: bool = False    # Pallas path (TPU); False -> XLA oracle path
+    remat: str = "none"         # "none" | "block"
+    # §Perf: pin recurrent-mixer operands to batch-only sharding (kills the
+    # per-chunk resharding collectives in the rwkv6 scan; see models/rwkv6.py)
+    constrain_recurrence: bool = False
+
+    def chunks_for(self, seq_len: int) -> Tuple[int, int]:
+        if self.q_chunk and self.kv_chunk:
+            return self.q_chunk, self.kv_chunk
+        if seq_len > 2048:
+            c = 512
+            while seq_len % c:
+                c //= 2
+            return c, c
+        return 0, 0
+
+
+def _reps_rem(cfg: ModelConfig) -> Tuple[int, int]:
+    p = len(cfg.pattern)
+    return cfg.num_layers // p, cfg.num_layers % p
+
+
+# ----------------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.dtype)
+    keys = split_keys(key, 8)
+    reps, rem = _reps_rem(cfg)
+    params: Dict[str, Any] = {
+        "embed": normal_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = normal_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), dtype, fan_in=cfg.d_model)
+    if cfg.frontend != "none":
+        fd = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = normal_init(
+            keys[2], (fd, cfg.d_model), dtype, fan_in=fd)
+
+    def stacked(key, kind):
+        ks = jax.random.split(key, reps)
+        return jax.vmap(lambda k: blk.init_block(k, kind, cfg, dtype))(ks)
+
+    lk = split_keys(keys[3], len(cfg.pattern) + max(rem, 1))
+    params["layers"] = {
+        str(i): stacked(lk[i], kind) for i, kind in enumerate(cfg.pattern)
+    } if reps else {}
+    params["tail"] = {
+        str(i): blk.init_block(lk[len(cfg.pattern) + i], cfg.pattern[i], cfg, dtype)
+        for i in range(rem)
+    }
+
+    if cfg.is_encoder_decoder:
+        ek = split_keys(keys[4], 2)
+        enc_reps = cfg.num_encoder_layers
+        eks = jax.random.split(ek[0], enc_reps)
+        params["encoder"] = {
+            "layers": {"0": jax.vmap(
+                lambda k: blk.init_block(k, MIX_ATTN, cfg, dtype))(eks)},
+            "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+    return params
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, capacity: int) -> Dict[str, Any]:
+    """Stacked per-slot block states + tail states (+ enc-dec memory)."""
+    dtype = dtype_of(cfg.dtype)
+    reps, rem = _reps_rem(cfg)
+
+    def stack_state(kind):
+        one = blk.init_block_state(kind, cfg, batch, capacity, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (reps,) + a.shape), one)
+
+    state: Dict[str, Any] = {
+        "slots": {str(i): stack_state(kind)
+                  for i, kind in enumerate(cfg.pattern)} if reps else {},
+        "tail": {str(i): blk.init_block_state(cfg.pattern[i], cfg, batch,
+                                              capacity, dtype)
+                 for i in range(rem)},
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        m = cfg.frontend_seq_len or 256
+        state["enc_out"] = jnp.zeros((batch, m, cfg.d_model), dtype)
+    return state
+
+
+# ----------------------------------------------------------------------------
+# Layer stack execution
+# ----------------------------------------------------------------------------
+
+def _run_stack(
+    layer_params: dict,
+    tail_params: dict,
+    pattern: Tuple[str, ...],
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    policy: ExecPolicy,
+    *,
+    memory: Optional[jax.Array] = None,
+    states: Optional[dict] = None,     # {"slots": ..., "tail": ...}
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    reps = 0
+    if layer_params:
+        reps = jax.tree.leaves(layer_params)[0].shape[0]
+    qc, kc = policy.chunks_for(x.shape[1])
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def apply_one(p, kind, x, st):
+        return blk.apply_block(
+            p, kind, x, positions, cfg, memory=memory, state=st,
+            causal=causal, q_chunk=qc, kv_chunk=kc,
+            use_kernel=policy.use_kernel,
+            constrain_recurrence=policy.constrain_recurrence)
+
+    new_states: Optional[dict] = {"slots": {}, "tail": {}} if states is not None else None
+
+    if reps:
+        slot_states = states["slots"] if states is not None else None
+
+        def body(carry, xs):
+            x, aux = carry
+            p_slice = xs[0]
+            s_slice = xs[1] if states is not None else None
+            out_states = {}
+            for i, kind in enumerate(pattern):
+                st = s_slice[str(i)] if s_slice is not None else None
+                x, ns, a = apply_one(p_slice[str(i)], kind, x, st)
+                if ns is not None:
+                    out_states[str(i)] = ns
+                aux = aux + a
+            return (x, aux), (out_states if out_states else None)
+
+        if policy.scan_layers:
+            fn = body
+            if policy.remat == "block" and states is None:
+                fn = jax.checkpoint(body, prevent_cse=False)
+            xs = (layer_params,) if states is None else (layer_params, slot_states)
+            (x, aux), ys = jax.lax.scan(fn, (x, aux0), xs)
+            if states is not None:
+                new_states["slots"] = ys
+        else:
+            fn = body
+            if policy.remat == "block" and states is None:
+                fn = jax.checkpoint(body, prevent_cse=False)
+            aux = aux0
+            acc = []
+            for r in range(reps):
+                p_slice = jax.tree.map(lambda a: a[r], layer_params)
+                s_slice = (jax.tree.map(lambda a: a[r], slot_states)
+                           if states is not None else None)
+                (x, aux), ns = fn((x, aux), (p_slice,) if states is None
+                                  else (p_slice, s_slice))
+                acc.append(ns)
+            if states is not None:
+                new_states["slots"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *acc)
+    else:
+        aux = aux0
+
+    for i in sorted(tail_params, key=int):
+        kind = pattern[int(i)]
+        st = states["tail"][i] if states is not None else None
+        x, ns, a = apply_one(tail_params[i], kind, x, st)
+        if states is not None:
+            new_states["tail"][i] = ns
+        aux = aux + a
+    return x, new_states, aux
+
+
+# ----------------------------------------------------------------------------
+# Full forward passes
+# ----------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, tokens):
+    h = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h
+
+
+def logits_from_hidden(params, cfg: ModelConfig, h) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", h, w).astype(dtype_of(cfg.logit_dtype))
+
+
+def encode(params, cfg: ModelConfig, policy: ExecPolicy, *,
+           frontend_embeds=None, encoder_tokens=None) -> jax.Array:
+    """Encoder pass (enc-dec models). Returns (B, M, D) memory."""
+    enc = params["encoder"]
+    if frontend_embeds is not None:
+        h = jnp.einsum("bmf,fd->bmd", frontend_embeds, params["frontend_proj"])
+    else:
+        h = _embed(params, cfg, encoder_tokens)
+    pos = jnp.broadcast_to(jnp.arange(h.shape[1], dtype=jnp.int32)[None],
+                           h.shape[:2])
+    h, _, _ = _run_stack(enc["layers"], {}, (MIX_ATTN,), h, pos, cfg, policy,
+                         causal=False)
+    return rms_norm(h, enc["final_norm"], cfg.norm_eps)
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                    # (B, S)
+    positions: Optional[jax.Array] = None,
+    *,
+    policy: ExecPolicy = ExecPolicy(),
+    frontend_embeds: Optional[jax.Array] = None,
+    states: Optional[dict] = None,
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (logits | hidden, new_states, aux_loss).
+
+    Train / prefill: states=None / states=fresh; decode: S == 1 with states.
+    """
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    memory = None
+    if cfg.is_encoder_decoder:
+        if states is not None and frontend_embeds is None:
+            memory = states["enc_out"]
+        else:
+            memory = encode(params, cfg, policy,
+                            frontend_embeds=frontend_embeds)
+    elif cfg.frontend != "none" and frontend_embeds is not None:
+        memory = jnp.einsum("bmf,fd->bmd", frontend_embeds,
+                            params["frontend_proj"])
+
+    h = _embed(params, cfg, tokens)
+    h, new_states, aux = _run_stack(
+        params["layers"], params["tail"], cfg.pattern, h, positions, cfg,
+        policy, memory=memory, states=states, causal=True)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+    if states is not None and new_states is not None:
+        new_states["pos"] = positions[0, -1].astype(jnp.int32) + 1
+        if cfg.is_encoder_decoder:
+            new_states["enc_out"] = memory
+    if return_hidden:
+        return h, new_states, aux
+    return logits_from_hidden(params, cfg, h), new_states, aux

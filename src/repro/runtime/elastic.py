@@ -1,0 +1,68 @@
+"""Elastic re-meshing: resume any checkpoint on any mesh.
+
+Checkpoints record global slice indices (ckpt/checkpoint.py), so "elastic"
+reduces to: build the new mesh, derive shardings for it from the same logical
+rules, and restore.  ``remesh_plan`` additionally sanity-checks that the
+surviving topology can express the job (divisibility of batch and the model's
+TP-sharded dims) BEFORE committing — at 1000-node scale you want the
+no-go answer before you tear down the old job.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+
+from repro.config.model import ModelConfig
+from repro.config.run import MeshConfig
+from repro.sharding import opt_state_shardings, param_shardings
+
+
+@dataclasses.dataclass
+class RemeshPlan:
+    old: MeshConfig
+    new: MeshConfig
+    ok: bool
+    notes: List[str]
+
+
+def remesh_plan(cfg: ModelConfig, old: MeshConfig, new: MeshConfig,
+                global_batch: int) -> RemeshPlan:
+    notes = []
+    ok = True
+    if global_batch % (new.data * new.pod):
+        ok = False
+        notes.append(
+            f"global_batch {global_batch} not divisible by new dp "
+            f"{new.data * new.pod}")
+    for dim, name in ((cfg.d_ff, "d_ff"), (cfg.vocab_size, "vocab")):
+        if dim % new.model:
+            notes.append(f"{name} {dim} not divisible by model={new.model}; "
+                         "will replicate (allowed, slower)")
+    if cfg.num_experts and cfg.num_experts % new.model:
+        notes.append(f"experts {cfg.num_experts} not divisible by "
+                     f"model={new.model}; EP degraded to replication")
+    if not notes:
+        notes.append("clean re-shard")
+    return RemeshPlan(old, new, ok, notes)
+
+
+def restore_on_mesh(manager, abstract_state: Any, mesh,
+                    step: Optional[int] = None) -> Any:
+    """Restore a checkpoint onto a (possibly different) mesh."""
+    ps = param_shardings(abstract_state["params"], mesh)
+    sh = {"params": ps, "step": jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec())}
+    if "opt" in abstract_state:
+        sh["opt"] = {
+            "m": opt_state_shardings(ps, abstract_state["params"], mesh),
+            "count": jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()),
+        }
+        if "v" in abstract_state["opt"]:
+            sh["opt"]["v"] = opt_state_shardings(
+                ps, abstract_state["params"], mesh)
+    if "ef" in abstract_state:
+        sh["ef"] = ps
+    return manager.restore(abstract_state, sh, step=step)

@@ -1,0 +1,84 @@
+"""Health / straggler monitoring and failure injection.
+
+At pod scale the dominant soft-failures are stragglers (a slow host stalls
+the synchronous step) and background-plane faults.  ``StepTimeMonitor`` does
+robust (median/MAD) outlier detection on step wall-times and raises
+mitigation advisories; ``FailureInjector`` lets tests exercise the paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    step_time: float
+    median: float
+    mad_z: float
+    advisory: str
+
+
+class StepTimeMonitor:
+    """Robust z-score straggler detector over a sliding window."""
+
+    def __init__(self, window: int = 50, z_threshold: float = 4.0,
+                 min_samples: int = 10):
+        self.window = window
+        self.z = z_threshold
+        self.min_samples = min_samples
+        self._times: Deque[float] = deque(maxlen=window)
+        self.reports: List[StragglerReport] = []
+        self._step = 0
+
+    @staticmethod
+    def _median(xs) -> float:
+        s = sorted(xs)
+        n = len(s)
+        return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+    def record(self, dt: float) -> Optional[StragglerReport]:
+        self._step += 1
+        report = None
+        if len(self._times) >= self.min_samples:
+            med = self._median(self._times)
+            mad = self._median([abs(x - med) for x in self._times])
+            # floor: a perfectly steady window must not flag 1% jitter
+            mad = max(mad, 0.02 * med, 1e-6)
+            z = 0.6745 * (dt - med) / mad
+            if z > self.z:
+                advisory = ("straggler: step {:.3f}s vs median {:.3f}s "
+                            "(z={:.1f}); advisory={}").format(
+                    dt, med, z,
+                    "re-mesh" if z > 4 * self.z else "monitor")
+                report = StragglerReport(self._step, dt, med, z, advisory)
+                self.reports.append(report)
+        self._times.append(dt)
+        return report
+
+    @property
+    def median_step_time(self) -> float:
+        return self._median(self._times) if self._times else 0.0
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests/benches."""
+
+    def __init__(self, fail_steps=(), exc=RuntimeError,
+                 slow_steps=(), slow_s: float = 0.05):
+        self.fail_steps = set(fail_steps)
+        self.slow_steps = set(slow_steps)
+        self.exc = exc
+        self.slow_s = slow_s
+        self._step = 0
+
+    def tick(self):
+        self._step += 1
+        if self._step in self.slow_steps:
+            time.sleep(self.slow_s)
+        if self._step in self.fail_steps:
+            raise self.exc(f"injected failure at step {self._step}")

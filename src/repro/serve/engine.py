@@ -1,0 +1,95 @@
+"""Batched serving engine: prefill + decode with continuous admission.
+
+The host-side request queue is sidecar work (G2): tokenized requests are
+admitted/evicted between device decode steps; the device only ever executes
+the fixed-shape prefill/decode programs.  KV caches follow the model's cache
+semantics (ring buffers for SWA layers, O(1) recurrent state), which is what
+lets the hybrid/SSM archs serve 500k-token contexts at constant memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model import ModelConfig
+from repro.config.run import ServeConfig
+from repro.models.transformer import ExecPolicy, init_decode_state
+from repro.serve.sampler import sample
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int
+    submitted_at: float = dataclasses.field(default_factory=time.time)
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+    output: List[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    """Fixed-batch engine: pads the active set to ``max_batch``."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 policy: ExecPolicy = ExecPolicy()):
+        self.cfg, self.scfg = cfg, scfg
+        self.params = params
+        self.policy = policy
+        self._prefill = jax.jit(make_prefill_step(cfg, policy))
+        self._decode = jax.jit(make_decode_step(cfg, policy), donate_argnums=1)
+        self._key = jax.random.PRNGKey(scfg.seed)
+
+    def generate(self, prompts: List[np.ndarray], max_new_tokens: int,
+                 frontend_embeds: Optional[np.ndarray] = None
+                 ) -> Dict[int, Request]:
+        """Batched generation.  Prompts must be equal length (the engine runs
+        fixed-shape programs; the host-side admission layer is responsible for
+        length-bucketing — standard batch-serving practice)."""
+        B = len(prompts)
+        lens = {len(p) for p in prompts}
+        if len(lens) != 1:
+            raise ValueError("ServeEngine batches must be length-bucketed; "
+                             f"got lengths {sorted(lens)}")
+        S = max(lens.pop(), 1)
+        reqs = {i: Request(i, np.asarray(p, np.int32), max_new_tokens)
+                for i, p in enumerate(prompts)}
+        toks = np.stack([np.asarray(p, np.int32) for p in prompts])
+        positions = np.broadcast_to(
+            np.arange(S, dtype=np.int32)[None, :], (B, S)).copy()
+
+        states = init_decode_state(
+            self.cfg, B, capacity=S + max_new_tokens)
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(positions)}
+        if frontend_embeds is not None:
+            batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
+        states, logits = self._prefill(self.params, states, batch)
+        t_first = time.time()
+
+        cur_pos = np.array([len(p) for p in prompts], np.int32)
+        for r in reqs.values():
+            r.first_token_at = t_first
+        for step in range(max_new_tokens):
+            self._key, sk = jax.random.split(self._key)
+            next_tok = sample(logits, sk, self.scfg)        # (B,)
+            host_tok = np.asarray(next_tok)
+            for i, r in reqs.items():
+                if len(r.output) < r.max_new_tokens:
+                    r.output.append(int(host_tok[i]))
+            if step == max_new_tokens - 1:
+                break
+            batch = {"tokens": next_tok[:, None],
+                     "positions": jnp.asarray(cur_pos)[:, None]}
+            states, logits = self._decode(self.params, states, batch)
+            cur_pos = cur_pos + 1
+        done = time.time()
+        for r in reqs.values():
+            r.finished_at = done
+        return reqs

@@ -1,0 +1,25 @@
+"""Token sampling: greedy / temperature / top-k / top-p."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.run import ServeConfig
+
+
+def sample(logits: jax.Array, key, scfg: ServeConfig) -> jax.Array:
+    """logits (B, V) -> tokens (B,) int32."""
+    if scfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / scfg.temperature
+    if scfg.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -scfg.top_k][:, None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    if scfg.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < scfg.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)

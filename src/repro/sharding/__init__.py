@@ -1,0 +1,9 @@
+from repro.sharding.rules import (
+    RULES, batch_shardings, mesh_axis_sizes, named, opt_state_shardings,
+    param_shardings, partition_spec, state_shardings, zero1_sharding)
+
+__all__ = [
+    "RULES", "batch_shardings", "mesh_axis_sizes", "named",
+    "opt_state_shardings", "param_shardings", "partition_spec",
+    "state_shardings", "zero1_sharding",
+]

@@ -1,0 +1,256 @@
+"""Logical-axis sharding: name-based rules with divisibility fallback.
+
+Every parameter / cache / activation dim gets a *logical* axis name; RULES
+maps logical axes to candidate mesh axes.  Resolution keeps only mesh axes
+that (a) exist in the mesh, (b) divide the dim (cumulatively), and (c) are not
+already used by another dim of the same tensor.  This is what keeps every
+(arch x mesh) dry-run cell compilable — e.g. smollm's 15 heads on a 16-way
+"model" axis simply fall back to replication while its ffn/vocab still shard.
+
+ZeRO-1 (paper G3 — treat peers as memory endpoints): optimizer-state specs
+additionally shard the largest free dim over "data"; XLA SPMD derives the
+reduce-scatter(grads) + all-gather(params) schedule from the annotations.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.model import ModelConfig
+
+# logical axis -> ordered candidate mesh axes
+RULES: Dict[str, Tuple[str, ...]] = {
+    # weights
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "hidden": ("model",),      # rglru width / rwkv projected channels
+    "embed": (),               # residual dim: replicated (activations flow)
+    "head_dim": (),
+    "layers": (),              # stacked-repetition leading dim
+    # activations / caches
+    "batch": ("data", "pod"),
+    "seq": (),
+    "cache_batch": ("data", "pod"),
+    "cache_seq": ("data",),
+    "state_n": ("model",),     # rwkv per-head state dim fallback
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def partition_spec(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+                   mesh: Mesh) -> P:
+    sizes = mesh_axis_sizes(mesh)
+    used: set = set()
+    parts = []
+    for dim, lg in zip(shape, logical):
+        cand = RULES.get(lg, ()) if lg else ()
+        take = []
+        prod = 1
+        for ax in cand:
+            if ax in sizes and ax not in used and sizes[ax] > 1 \
+                    and dim % (prod * sizes[ax]) == 0:
+                take.append(ax)
+                prod *= sizes[ax]
+        if take:
+            used.update(take)
+            parts.append(take[0] if len(take) == 1 else tuple(take))
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def named(mesh: Mesh, shape, logical) -> NamedSharding:
+    return NamedSharding(mesh, partition_spec(tuple(shape), logical, mesh))
+
+
+# ----------------------------------------------------------------------------
+# Parameter logical axes by tree path
+# ----------------------------------------------------------------------------
+
+_ATTN3 = {"wq": ("embed", "heads", "head_dim"),
+          "wk": ("embed", "kv_heads", "head_dim"),
+          "wv": ("embed", "kv_heads", "head_dim"),
+          "wo": ("heads", "head_dim", "embed")}
+_MOE3 = {"wi": ("experts", "embed", "mlp"),
+         "wg": ("experts", "embed", "mlp"),
+         "wo": ("experts", "mlp", "embed")}
+_MLP2 = {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"),
+         "wo": ("mlp", "embed"), "wk": ("embed", "mlp"),
+         "wv": ("mlp", "embed"), "wr": ("embed", None)}
+_MIX2 = {"wx": ("embed", "hidden"), "wy": ("embed", "hidden"),
+         "wa": ("hidden", None), "wi": ("hidden", None),
+         "wo": ("hidden", "embed"),
+         "wr": ("embed", "hidden"), "wk": ("embed", "hidden"),
+         "wv": ("embed", "hidden"), "wg": ("embed", "hidden"),
+         "wd1": ("embed", None), "wd2": (None, "hidden"),
+         "conv": (None, "hidden"), "bonus": (None, None)}
+
+
+def _leaf_logical(path: Tuple[str, ...], ndim: int) -> Tuple[Optional[str], ...]:
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    stacked = "layers" in path[:-1]
+    base: Tuple[Optional[str], ...]
+    eff = ndim - (1 if stacked else 0)
+
+    if name == "embed":
+        base = ("vocab", "embed")
+    elif name == "unembed":
+        base = ("embed", "vocab")
+    elif name == "frontend_proj":
+        base = (None, None)
+    elif name == "router":
+        base = ("embed", "experts")
+    elif parent in ("mixer", "cross"):
+        if eff == 3 and name in _ATTN3:
+            base = _ATTN3[name]
+        elif eff == 2 and name in _MIX2:
+            base = _MIX2[name]
+        else:
+            base = (None,) * eff
+    elif parent == "mlp":
+        if eff == 3 and name in _MOE3:
+            base = _MOE3[name]
+        elif eff == 2 and name in _MLP2:
+            base = _MLP2[name]
+        else:
+            base = (None,) * eff
+    else:
+        base = (None,) * eff
+    if stacked:
+        base = ("layers",) + base
+    if len(base) != ndim:   # safety: never mis-rank
+        base = (None,) * ndim
+    return base
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_shardings(params_tree: Any, mesh: Mesh,
+                    drop_logical: Tuple[str, ...] = ()) -> Any:
+    """NamedSharding tree for a (possibly abstract) param tree.
+
+    ``drop_logical``: logical axes to force-replicate (e.g. ("experts",) for
+    the moe_expert_sharding="replicate" §Perf variant).
+    """
+    def f(path, leaf):
+        names = _path_names(path)
+        logical = _leaf_logical(names, len(leaf.shape))
+        if drop_logical:
+            logical = tuple(None if lg in drop_logical else lg
+                            for lg in logical)
+        return named(mesh, leaf.shape, logical)
+    return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+# ----------------------------------------------------------------------------
+# Decode-state logical axes
+# ----------------------------------------------------------------------------
+
+def _state_leaf_logical(path: Tuple[str, ...], ndim: int) -> Tuple[Optional[str], ...]:
+    name = path[-1]
+    stacked = "slots" in path[:-1]
+    eff = ndim - (1 if stacked else 0)
+    table = {
+        ("k", 4): ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+        ("v", 4): ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+        ("pos", 2): ("cache_batch", "cache_seq"),
+        ("mem_k", 4): ("cache_batch", None, "kv_heads", "head_dim"),
+        ("mem_v", 4): ("cache_batch", None, "kv_heads", "head_dim"),
+        ("S", 4): ("cache_batch", None, "state_n", None),   # rwkv (B,H,N,N)
+        ("h", 2): ("cache_batch", "hidden"),                # rglru (B,W)
+        ("conv", 3): ("cache_batch", None, "hidden"),
+        ("x_prev", 2): ("cache_batch", None),
+        ("cmix_prev", 2): ("cache_batch", None),
+        ("enc_out", 3): ("cache_batch", None, None),
+    }
+    base = table.get((name, eff), (None,) * eff)
+    if stacked:
+        base = ("layers",) + base
+    if len(base) != ndim:
+        base = (None,) * ndim
+    return base
+
+
+def state_shardings(state_tree: Any, mesh: Mesh) -> Any:
+    def f(path, leaf):
+        names = _path_names(path)
+        logical = _state_leaf_logical(names, len(leaf.shape))
+        return named(mesh, leaf.shape, logical)
+    return jax.tree_util.tree_map_with_path(f, state_tree)
+
+
+# ----------------------------------------------------------------------------
+# ZeRO-1 optimizer-state sharding (G3: peers as memory endpoints)
+# ----------------------------------------------------------------------------
+
+def zero1_sharding(param_sharding: NamedSharding, shape: Tuple[int, ...],
+                   mesh: Mesh) -> NamedSharding:
+    """Add the "data" axis to the largest free, divisible dim of the spec."""
+    sizes = mesh_axis_sizes(mesh)
+    if "data" not in sizes or sizes["data"] <= 1:
+        return param_sharding
+    spec = list(param_sharding.spec)
+    spec += [None] * (len(shape) - len(spec))
+    used = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            used.add(ax)
+    if "data" in used:
+        return param_sharding
+    d = sizes["data"]
+    best, best_dim = -1, -1
+    for i, (dim, entry) in enumerate(zip(shape, spec)):
+        cur = 1
+        if entry is not None:
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                cur *= sizes[ax]
+        local = dim // cur
+        if dim % (cur * d) == 0 and local > best:
+            best, best_dim = local, i
+    if best_dim < 0:
+        return param_sharding
+    entry = spec[best_dim]
+    if entry is None:
+        spec[best_dim] = "data"
+    elif isinstance(entry, tuple):
+        spec[best_dim] = entry + ("data",)
+    else:
+        spec[best_dim] = (entry, "data")
+    return NamedSharding(mesh, P(*spec))
+
+
+def opt_state_shardings(param_shardings_tree: Any, params_tree: Any,
+                        mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda sh, p: zero1_sharding(sh, p.shape, mesh),
+        param_shardings_tree, params_tree)
+
+
+def batch_shardings(batch_tree: Any, mesh: Mesh) -> Any:
+    """Inputs: shard dim0 (batch) over data(+pod); rest replicated."""
+    def f(leaf):
+        logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return named(mesh, leaf.shape, logical)
+    return jax.tree.map(f, batch_tree)

@@ -1,0 +1,43 @@
+"""Error-feedback int8 gradient compression (distributed-optimization trick).
+
+Models the on-wire effect of a compressed DP all-reduce: each gradient tensor
+is quantized to int8 with a per-tensor scale before the (implicit) all-reduce,
+and the quantization residual is carried in an error-feedback buffer so the
+information is not lost, only delayed (Seide et al. / EF-SGD).  The wire-byte
+saving (4x vs f32, 2x vs bf16) is accounted in the roofline's collective term;
+the numerical behaviour (convergence with EF) is what the tests verify.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_error_feedback(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Returns (compressed-then-decompressed grads, new error buffers)."""
+    def f(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_int8(gf)
+        ghat = dequantize_int8(q, s)
+        return ghat.astype(g.dtype), gf - ghat
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    out = [f(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def init_error_buffers(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,52 @@
+"""Loss: sequence-chunked softmax cross-entropy with z-loss.
+
+Chunking over the sequence bounds logits memory at (B, chunk, V) instead of
+(B, S, V) — essential at train_4k x 256k-vocab (a 4096-seq, 256-batch global
+step would otherwise materialize >1TB of f32 logits across the pod).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig
+
+
+def _unembed_matrix(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def chunked_xent(params: Any, cfg: ModelConfig, hidden: jax.Array,
+                 targets: jax.Array, mask: jax.Array,
+                 z_loss: float = 0.0, chunk: int = 512
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """hidden (B,S,D), targets (B,S) int32, mask (B,S) -> (mean loss, metrics)."""
+    B, S, D = hidden.shape
+    W = _unembed_matrix(params, cfg)
+    if S % chunk:
+        chunk = S  # fall back to single chunk for odd lengths
+    nc = S // chunk
+
+    def body(carry, xs):
+        ce_sum, z_sum, n_sum, correct = carry
+        h_c, t_c, m_c = xs                                   # (B,c,·)
+        logits = jnp.einsum("bcd,dv->bcv", h_c, W).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)              # (B,c)
+        ll = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        ce = (lse - ll) * m_c
+        z = jnp.square(lse) * m_c
+        pred_ok = (jnp.argmax(logits, axis=-1) == t_c) * m_c
+        return (ce_sum + ce.sum(), z_sum + z.sum(), n_sum + m_c.sum(),
+                correct + pred_ok.sum()), None
+
+    xs = tuple(a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+               for a in (hidden, targets, mask))
+    (ce_sum, z_sum, n, correct), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32),) * 4, xs)
+    n = jnp.maximum(n, 1.0)
+    loss = ce_sum / n + z_loss * z_sum / n
+    metrics = {"ce": ce_sum / n, "zloss": z_sum / n, "acc": correct / n,
+               "tokens": n}
+    return loss, metrics

@@ -1,0 +1,101 @@
+"""Optimizers: AdamW, Lion, SGD-momentum. f32 state over (possibly bf16) params.
+
+State layout: {"m": tree, "v": tree (adamw only), "count": scalar}.
+Under the production mesh, m/v are ZeRO-1-sharded over the "data" axis
+(sharding/rules.opt_state_shardings) — the paper-G3 "expand memory by using
+peer endpoints" doctrine applied to optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.run import TrainConfig
+
+
+def init_opt_state(params: Any, tcfg: TrainConfig) -> Dict[str, Any]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    st: Dict[str, Any] = {"count": jnp.zeros((), jnp.int32),
+                          "m": jax.tree.map(f32, params)}
+    if tcfg.optimizer == "adamw":
+        st["v"] = jax.tree.map(f32, params)
+    return st
+
+
+def abstract_opt_state(params: Any, tcfg: TrainConfig) -> Dict[str, Any]:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    st: Dict[str, Any] = {"count": jax.ShapeDtypeStruct((), jnp.int32),
+                          "m": jax.tree.map(f32, params)}
+    if tcfg.optimizer == "adamw":
+        st["v"] = jax.tree.map(f32, params)
+    return st
+
+
+def apply_update(params: Any, grads: Any, opt_state: Dict[str, Any],
+                 tcfg: TrainConfig, lr: jax.Array
+                 ) -> Tuple[Any, Dict[str, Any]]:
+    count = opt_state["count"] + 1
+    cf = count.astype(jnp.float32)
+    b1, b2, eps, wd = tcfg.b1, tcfg.b2, tcfg.eps, tcfg.weight_decay
+
+    if tcfg.optimizer == "adamw":
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * jnp.square(gf)
+            mhat = m2 / (1 - b1 ** cf)
+            vhat = v2 / (1 - b2 ** cf)
+            step = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(opt_state["m"])
+        flat_v = tdef.flatten_up_to(opt_state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    if tcfg.optimizer == "lion":
+        def upd(p, g, m):
+            gf = g.astype(jnp.float32)
+            update = jnp.sign(b1 * m + (1 - b1) * gf) + wd * p.astype(jnp.float32)
+            m2 = b2 * m + (1 - b2) * gf
+            return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m2
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(opt_state["m"])
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"m": tdef.unflatten([o[1] for o in out]), "count": count})
+
+    if tcfg.optimizer == "sgdm":
+        def upd(p, g, m):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + gf
+            return (p.astype(jnp.float32) - lr * m2).astype(p.dtype), m2
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(opt_state["m"])
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"m": tdef.unflatten([o[1] for o in out]), "count": count})
+
+    raise ValueError(tcfg.optimizer)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,19 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config.run import TrainConfig
+
+
+def learning_rate(tcfg: TrainConfig, step) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to 10% of peak."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.asarray(max(tcfg.warmup_steps, 1), jnp.float32)
+    total = jnp.asarray(max(tcfg.steps, 2), jnp.float32)
+    peak = tcfg.learning_rate
+    warm_lr = peak * jnp.minimum((s + 1.0) / warm, 1.0)
+    frac = jnp.clip((s - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    decay_lr = peak * (0.1 + 0.9 * cos)
+    return jnp.where(s < warm, warm_lr, decay_lr)

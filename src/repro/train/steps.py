@@ -1,0 +1,152 @@
+"""pjit-able train / serve step builders + abstract state constructors.
+
+``make_train_step`` returns a pure function (state, batch) -> (state, metrics)
+suitable for ``jax.jit(..., in_shardings=..., donate_argnums=0)``; the dry-run
+lowers exactly these functions with ShapeDtypeStruct inputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig
+from repro.config.run import TrainConfig
+from repro.models.transformer import (
+    ExecPolicy, forward, init_decode_state, init_params)
+from repro.train import compression as comp
+from repro.train import optimizer as opt
+from repro.train.losses import chunked_xent
+from repro.train.schedule import learning_rate
+
+
+# ----------------------------------------------------------------------------
+# State constructors
+# ----------------------------------------------------------------------------
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> Dict[str, Any]:
+    params = init_params(key, cfg)
+    state = {"params": params,
+             "opt": opt.init_opt_state(params, tcfg),
+             "step": jnp.zeros((), jnp.int32)}
+    if tcfg.grad_compression == "int8_ef":
+        state["ef"] = comp.init_error_buffers(params)
+    return state
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct train state — no allocation (dry-run path)."""
+    params = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    state = {"params": params,
+             "opt": opt.abstract_opt_state(params, tcfg),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if tcfg.grad_compression == "int8_ef":
+        state["ef"] = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return state
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, capacity: int) -> Any:
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, capacity))
+
+
+# ----------------------------------------------------------------------------
+# Train step
+# ----------------------------------------------------------------------------
+
+def _loss_fn(params, batch, cfg: ModelConfig, tcfg: TrainConfig,
+             policy: ExecPolicy):
+    kw = {}
+    if "frontend_embeds" in batch:
+        kw["frontend_embeds"] = batch["frontend_embeds"]
+    hidden, _, aux = forward(params, cfg, batch["tokens"],
+                             policy=policy, return_hidden=True, **kw)
+    loss, metrics = chunked_xent(params, cfg, hidden, batch["targets"],
+                                 batch["loss_mask"], z_loss=tcfg.z_loss)
+    total = loss + tcfg.moe_aux_loss * aux
+    metrics["aux"] = aux
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    policy: ExecPolicy = ExecPolicy()):
+    grad_fn = jax.value_and_grad(
+        functools.partial(_loss_fn, cfg=cfg, tcfg=tcfg, policy=policy),
+        has_aux=True)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]
+                   ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+        params = state["params"]
+        nmb = tcfg.microbatches
+        if nmb > 1:
+            def split(a):
+                return a.reshape(nmb, a.shape[0] // nmb, *a.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(carry, mb_batch):
+                gsum, lsum, msum = carry
+                (l, m), g = grad_fn(params, mb_batch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                msum = jax.tree.map(lambda a, b: a + b, msum, m)
+                return (gsum, lsum + l, msum), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"ce": 0., "zloss": 0., "acc": 0., "tokens": 0., "aux": 0.}
+            m0 = jax.tree.map(lambda x: jnp.zeros((), jnp.float32), m0)
+            (gsum, lsum, msum), _ = jax.lax.scan(body, (g0, 0.0, m0), mb)
+            grads = jax.tree.map(lambda g: g / nmb, gsum)
+            loss = lsum / nmb
+            metrics = jax.tree.map(lambda m: m / nmb, msum)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if tcfg.grad_compression == "int8_ef":
+            grads, new_ef = comp.compress_with_error_feedback(
+                grads, state["ef"])
+        if tcfg.grad_clip > 0:
+            grads, gnorm = opt.clip_by_global_norm(grads, tcfg.grad_clip)
+        else:
+            gnorm = opt.global_norm(grads)
+
+        lr = learning_rate(tcfg, state["step"])
+        new_params, new_opt = opt.apply_update(
+            params, grads, state["opt"], tcfg, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if tcfg.grad_compression == "int8_ef":
+            new_state["ef"] = new_ef
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm, "lr": lr})
+        return new_state, metrics
+
+    return train_step
+
+
+# ----------------------------------------------------------------------------
+# Serve steps
+# ----------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, policy: ExecPolicy = ExecPolicy()):
+    def prefill_step(params, states, batch):
+        kw = {}
+        if "frontend_embeds" in batch:
+            kw["frontend_embeds"] = batch["frontend_embeds"]
+        logits, new_states, _ = forward(
+            params, cfg, batch["tokens"], batch.get("positions"),
+            policy=policy, states=states, **kw)
+        return new_states, logits[:, -1]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, policy: ExecPolicy = ExecPolicy()):
+    def decode_step(params, states, batch):
+        logits, new_states, _ = forward(
+            params, cfg, batch["tokens"], batch.get("positions"),
+            policy=policy, states=states)
+        return new_states, logits[:, -1]
+    return decode_step

@@ -1,0 +1,77 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned arch instantiates its REDUCED config (same family/pattern/
+features, tiny dims) and runs one forward + one train step on CPU, asserting
+output shapes and no NaNs.  Full configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import TrainConfig, get_config
+from repro.configs import ASSIGNED_ARCHS
+from repro.models import transformer as tf
+from repro.train.steps import init_train_state, make_train_step
+
+
+def _batch_for(cfg, key, b=2, s=16):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1),
+             "loss_mask": jnp.ones((b, s), jnp.float32)}
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = jax.random.normal(
+            key, (b, cfg.frontend_seq_len, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_smoke(arch, rng):
+    cfg = get_config(arch).reduced()
+    params = tf.init_params(rng, cfg)
+    batch = _batch_for(cfg, rng)
+    kw = {"frontend_embeds": batch["frontend_embeds"]} \
+        if "frontend_embeds" in batch else {}
+    logits, _, aux = tf.forward(params, cfg, batch["tokens"], **kw)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_smoke(arch, rng):
+    cfg = get_config(arch).reduced()
+    tcfg = TrainConfig(global_batch=2, seq_len=16, steps=4, warmup_steps=1)
+    state = init_train_state(rng, cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = _batch_for(cfg, rng)
+    new_state, metrics = step(state, batch)
+    assert int(new_state["step"]) == 1
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    diff = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state["params"], new_state["params"])
+    assert max(jax.tree.leaves(diff)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_full_forward(arch, rng):
+    """prefill(S) + decode(1) logits == full forward at position S."""
+    cfg = get_config(arch).reduced()
+    params = tf.init_params(rng, cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.frontend != "none":
+        kw["frontend_embeds"] = jax.random.normal(
+            rng, (B, cfg.frontend_seq_len, cfg.frontend_dim), jnp.float32)
+    full, _, _ = tf.forward(params, cfg, toks, **kw)
+    st = tf.init_decode_state(cfg, B, capacity=32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    _, st, _ = tf.forward(params, cfg, toks[:, :S], pos, states=st, **kw)
+    lg1, st, _ = tf.forward(params, cfg, toks[:, S:S + 1],
+                            jnp.full((B, 1), S, jnp.int32), states=st)
+    err = float(jnp.max(jnp.abs(lg1[:, 0] - full[:, S])))
+    assert err < 2e-3, f"{arch}: decode/full mismatch {err}"

@@ -1,0 +1,173 @@
+"""Checkpoint roundtrip / replication / elastic restore; executor; health."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import checkpoint as ck
+from repro.ckpt.manager import CheckpointManager
+from repro.core.endpoint import EndpointRegistry, HostMemoryPool
+from repro.core.executor import BackgroundExecutor
+from repro.runtime.health import FailureInjector, StepTimeMonitor
+
+
+# ----------------------------------------------------------------------------
+# checkpoint
+# ----------------------------------------------------------------------------
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32)),
+        "nested": {"b": jnp.asarray(rng.integers(0, 100, (4,)).astype(np.int32)),
+                   "c": jnp.asarray(rng.standard_normal((3, 5, 2))
+                                    .astype(np.float32))},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip_bitwise(tmp_path):
+    tree = _tree()
+    ck.save_checkpoint(str(tmp_path), 7, tree)
+    out = ck.restore_checkpoint(str(tmp_path), 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_roundtrip_property(tmp_path_factory, seed):
+    tmp = tmp_path_factory.mktemp(f"ck{seed % 100}")
+    tree = _tree(seed)
+    ck.save_checkpoint(str(tmp), 1, tree)
+    out = ck.restore_checkpoint(str(tmp), 1, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_uncommitted_checkpoint_invisible(tmp_path):
+    tree = _tree()
+    path = ck.save_checkpoint(str(tmp_path), 5, tree)
+    os.remove(os.path.join(path, ck.MANIFEST))   # simulate crash mid-commit
+    assert ck.list_steps(str(tmp_path)) == []
+
+
+def test_manager_async_replication_and_gc(tmp_path):
+    ex = BackgroundExecutor(num_threads=2, max_inflight=8)
+    reg = EndpointRegistry.local_peers(str(tmp_path / "peers"), 3)
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=2, executor=ex,
+                            replicas=reg)
+    tree = _tree()
+    for s in (1, 2, 3):
+        mgr.save(s, tree)
+    assert mgr.wait()
+    assert ck.list_steps(str(tmp_path / "ckpt")) == [2, 3]   # GC keep=2
+    for peer in reg.peers():
+        assert ck.list_steps(peer.root) != []                # replicated
+    # disaster: local loss, restore from peer
+    restored = mgr.restore_from_peer("peer0", tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    ex.shutdown()
+
+
+def test_elastic_restore_different_sharding(tmp_path):
+    """Save from one 'mesh', restore onto another (single-device here:
+    sharding degenerates, but the global-index path is exercised)."""
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    hs = jax.tree.map(ck.HostSharded.from_jax, tree)
+    ck.save_checkpoint(str(tmp_path), 1, hs)
+    out = ck.restore_checkpoint(str(tmp_path), 1, tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+# ----------------------------------------------------------------------------
+# executor (G2): bounded, fault-isolated
+# ----------------------------------------------------------------------------
+
+def test_executor_failure_isolation():
+    ex = BackgroundExecutor(num_threads=1, max_inflight=4, max_retries=1)
+
+    def boom():
+        raise ValueError("injected")
+
+    def ok():
+        return 42
+
+    t1 = ex.submit("boom", boom)
+    t2 = ex.submit("ok", ok)
+    t1.done.wait(5)
+    t2.done.wait(5)
+    assert t1.record.error is not None
+    assert t2.result == 42                      # failure didn't poison queue
+    stats = ex.stats()
+    assert stats["failed"] == 1 and stats["completed"] == 1
+    ex.shutdown(drain=False)
+
+
+def test_executor_backpressure_drop_oldest():
+    ex = BackgroundExecutor(num_threads=1, max_inflight=2,
+                            backpressure="drop_oldest")
+    import threading
+    gate = threading.Event()
+    ex.submit("blocker", gate.wait, )
+    tasks = [ex.submit(f"t{i}", lambda i=i: i) for i in range(6)]
+    gate.set()
+    ex.drain(10)
+    stats = ex.stats()
+    assert stats["dropped"] > 0                 # bounded queue enforced
+    ex.shutdown(drain=False)
+
+
+def test_executor_stages_device_arrays():
+    ex = BackgroundExecutor(num_threads=1, max_inflight=4)
+    arr = jnp.arange(10)
+    out = {}
+
+    def consume(host):
+        out["type"] = type(host).__name__
+        out["sum"] = int(host.sum())
+
+    t = ex.submit("stage", consume, arr)
+    t.done.wait(5)
+    assert out["sum"] == 45                     # staged d2h on the sidecar
+    ex.shutdown(drain=False)
+
+
+# ----------------------------------------------------------------------------
+# host memory pool (G3)
+# ----------------------------------------------------------------------------
+
+def test_host_pool_capacity_and_prefetch():
+    pool = HostMemoryPool(capacity_bytes=1000)
+    pool.put("x", jnp.zeros(100, jnp.float32))          # 400B
+    with pytest.raises(MemoryError):
+        pool.put("y", jnp.zeros(200, jnp.float32))      # 800B > remaining
+    back = pool.to_device("x")
+    assert isinstance(back, jax.Array)
+    pool.delete("x")
+    assert pool.used == 0
+
+
+# ----------------------------------------------------------------------------
+# straggler monitor
+# ----------------------------------------------------------------------------
+
+def test_straggler_detection():
+    mon = StepTimeMonitor(window=30, z_threshold=4.0, min_samples=10)
+    for _ in range(20):
+        mon.record(0.100)
+    rep = mon.record(0.500)                     # 5x median
+    assert rep is not None and "straggler" in rep.advisory
+    assert mon.record(0.101) is None            # normal step: quiet
+
+
+def test_failure_injector():
+    inj = FailureInjector(fail_steps=(3,))
+    inj.tick(); inj.tick()
+    with pytest.raises(RuntimeError):
+        inj.tick()

@@ -1,0 +1,150 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import OffloadConfig
+from repro.core.characterize import SidecarProfile
+from repro.core.costmodel import CostModel, Placement, TaskProfile
+from repro.core.endpoint import ShardedStore, hash_slot
+from repro.train.compression import (
+    compress_with_error_feedback, dequantize_int8, quantize_int8)
+
+PROFILE = SidecarProfile(
+    sidecar_matmul_flops=5e10, sidecar_mem_bw=1e10,
+    link_lat=2e-5, link_bw=1.2e10)
+
+
+# ----------------------------------------------------------------------------
+# Cost model (G4): the paper's negative result as an invariant
+# ----------------------------------------------------------------------------
+
+@given(flops=st.floats(1e3, 1e15), nbytes=st.floats(1.0, 1e10))
+@settings(max_examples=60, deadline=None)
+def test_critical_path_offload_never_beats_device_unless_cheaper(flops, nbytes):
+    cm = CostModel(PROFILE)
+    t = TaskProfile("t", flops=flops, bytes_in=nbytes, bytes_out=nbytes,
+                    on_critical_path=True)
+    d = cm.decide(t)
+    if d.placement == Placement.SIDECAR_SYNC:
+        assert d.est_sidecar_s < d.est_device_s
+    else:
+        assert d.placement == Placement.DEVICE
+        assert d.est_sidecar_s >= d.est_device_s
+
+
+@given(flops=st.floats(0, 1e12), nbytes=st.floats(0, 1e9),
+       period=st.floats(1e-3, 1e3))
+@settings(max_examples=60, deadline=None)
+def test_background_work_never_lands_on_device_unless_overloaded(
+        flops, nbytes, period):
+    cm = CostModel(PROFILE)
+    t = TaskProfile("t", flops=flops, bytes_in=nbytes, bytes_out=0.0,
+                    on_critical_path=False, period_s=period)
+    d = cm.decide(t)
+    sustained = cm.sidecar_compute_time(t) + cm.link_time(t)
+    if sustained < period:
+        assert d.placement == Placement.SIDECAR_ASYNC
+    else:
+        assert d.placement == Placement.DEVICE  # overload guard
+
+
+@given(st.floats(1e3, 1e12))
+@settings(max_examples=30, deadline=None)
+def test_link_time_monotone_in_bytes(nbytes):
+    cm = CostModel(PROFILE)
+    t1 = TaskProfile("a", 0, nbytes, 0, True)
+    t2 = TaskProfile("b", 0, nbytes * 2, 0, True)
+    assert cm.link_time(t2) >= cm.link_time(t1)
+
+
+# ----------------------------------------------------------------------------
+# int8 error-feedback compression
+# ----------------------------------------------------------------------------
+
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_quantize_bounded_error(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32)) * 10
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(2, 64), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_error_feedback_preserves_signal_over_time(n, seed):
+    """Sum of EF-compressed grads converges to the sum of true grads."""
+    rng = np.random.default_rng(seed)
+    g_true = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    err = {"g": jnp.zeros(n)}
+    total = jnp.zeros(n)
+    for _ in range(30):
+        ghat, new_err = compress_with_error_feedback({"g": g_true},
+                                                     {"g": err["g"]})
+        err = {"g": new_err["g"]}
+        total = total + ghat["g"]
+    # average compressed grad ~ true grad (EF guarantees bounded residual)
+    avg_err = float(jnp.max(jnp.abs(total / 30 - g_true)))
+    scale = float(jnp.max(jnp.abs(g_true))) / 127.0
+    assert avg_err < scale * 0.5 + 1e-5
+
+
+# ----------------------------------------------------------------------------
+# hash sharding (G3): Redis-slot invariants
+# ----------------------------------------------------------------------------
+
+@given(st.lists(st.text(min_size=1, max_size=20), min_size=1, max_size=60),
+       st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_sharded_store_roundtrip_and_ownership(keys, n_endpoints):
+    eps = [dict() for _ in range(n_endpoints)]
+    store = ShardedStore(eps)
+    expected = {}
+    for i, k in enumerate(keys):
+        store.put(k, i)
+        expected[k] = i                 # last write wins
+    for k, v in expected.items():
+        assert store.get(k) == v
+    # non-overlap: each key lives on exactly its owner
+    for i, k in enumerate(set(keys)):
+        owners = [j for j, e in enumerate(eps) if k in e]
+        assert owners == [store.owner(k)]
+
+
+@given(st.binary(min_size=0, max_size=64))
+@settings(max_examples=60, deadline=None)
+def test_hash_slot_in_range(key):
+    assert 0 <= hash_slot(key) < 16384
+
+
+# ----------------------------------------------------------------------------
+# Sharding rules: divisibility invariant
+# ----------------------------------------------------------------------------
+
+@given(st.integers(1, 4096), st.integers(1, 4096), st.integers(0, 4))
+@settings(max_examples=60, deadline=None)
+def test_partition_spec_always_divides(d0, d1, model_pow):
+    from jax.sharding import Mesh
+    from repro.sharding import partition_spec
+    # fake mesh sizes without building devices: use numpy-backed Mesh of 1
+    # device only when sizes are 1; otherwise construct spec logic directly.
+    from repro.sharding import rules as R
+    sizes = {"data": 1, "model": 2 ** model_pow}
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.zeros((1, 2 ** model_pow))
+    spec = partition_spec((d0, d1), ("vocab", "mlp"), FakeMesh())
+    for dim, entry in zip((d0, d1), spec):
+        if entry is None:
+            continue
+        prod = 1
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            prod *= sizes[ax]
+        assert dim % prod == 0
