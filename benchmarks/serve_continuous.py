@@ -1,0 +1,159 @@
+"""Continuous batching vs fixed-batch serving on a mixed Poisson trace.
+
+The ROADMAP's north star is absorbing heavy heterogeneous traffic; the
+paper's G2 split (bookkeeping on the sidecar, fixed-shape fast path on the
+device) is what makes that possible.  This benchmark replays one trace —
+Poisson-mixed prompt lengths and token budgets, in Poisson arrival order —
+through both engines:
+
+  * **fixed** — the old engine: requests grouped by prompt length (its
+    hard requirement), chunked into full batches, each batch decoded to its
+    *longest* member's budget before the next batch starts (drain bubbles +
+    wasted tail steps).
+  * **continuous** — the admission plane evicts each request at its own
+    EOS/budget and back-fills the freed slot mid-decode, so the decode batch
+    stays full.
+
+Reported: wall time, useful tokens/s (only requested tokens count), and mean
+TTFT.  Both engines are compile-warmed before timing.  The trace replay is
+offline (offered load >> capacity): arrival order is preserved, inter-arrival
+gaps are not simulated.
+
+    PYTHONPATH=src python benchmarks/serve_continuous.py
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.config import ServeConfig, TrainConfig, get_config
+from repro.serve.engine import ContinuousEngine, FixedBatchEngine, QueueFull
+from repro.train.steps import init_train_state
+
+
+@dataclasses.dataclass
+class TraceItem:
+    prompt: np.ndarray
+    max_new: int
+
+
+def make_trace(vocab: int, n: int, seed: int,
+               lengths=(8, 16), mean_new: float = 16.0) -> List[TraceItem]:
+    """Heavy-tailed (geometric) token budgets over a fixed set of prompt
+    lengths; arrival order comes from interleaved Poisson processes (one per
+    length).  The tail is the point: real decode lengths are heavy-tailed,
+    and a drain-the-batch engine pays every batch's *longest* budget."""
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    for L in lengths:
+        t = 0.0
+        for _ in range(n // len(lengths)):
+            t += rng.exponential(1.0)
+            new = int(np.clip(rng.geometric(1.0 / mean_new), 2, 64))
+            arrivals.append((t, L, new))
+    arrivals.sort()
+    return [TraceItem(rng.integers(0, vocab, L).astype(np.int32), new)
+            for _, L, new in arrivals]
+
+
+def run_fixed(eng: FixedBatchEngine, trace: List[TraceItem], max_batch: int):
+    """Group by length in arrival order, chunk to full batches, decode each
+    chunk to its longest budget (the old engine's only option)."""
+    groups = {}
+    for it in trace:
+        groups.setdefault(len(it.prompt), []).append(it)
+    t0 = time.time()
+    useful, ttfts = 0, []
+    for _, items in sorted(groups.items()):
+        for i in range(0, len(items), max_batch):
+            chunk = items[i:i + max_batch]
+            horizon = max(c.max_new for c in chunk)
+            reqs = eng.generate([c.prompt for c in chunk], horizon)
+            for j, c in enumerate(chunk):
+                useful += min(len(reqs[j].output), c.max_new)
+                # whole trace is queued at t0: TTFT includes batch-drain waits
+                ttfts.append(reqs[j].first_token_at - t0)
+    wall = time.time() - t0
+    return wall, useful, float(np.mean(ttfts))
+
+
+def run_continuous(eng: ContinuousEngine, trace: List[TraceItem]):
+    t0 = time.time()
+    rids = []
+    for it in trace:
+        while True:
+            try:
+                rids.append(eng.submit(it.prompt, it.max_new))
+                break
+            except QueueFull:
+                eng.step()
+    eng.run()
+    eng.executor.drain()
+    wall = time.time() - t0
+    useful = sum(len(eng.request(r).output) for r in rids)
+    ttfts = [eng.request(r).first_token_at - eng.request(r).submitted_at
+             for r in rids]
+    return wall, useful, float(np.mean(ttfts))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reps", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_config("repro-tiny")
+    state = init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
+    scfg = ServeConfig(max_batch=args.max_batch, max_seq_len=128,
+                       max_queue=4 * args.requests,
+                       prefill_buckets=(8, 16))
+    trace = make_trace(cfg.vocab_size, args.requests, args.seed)
+
+    fixed = FixedBatchEngine(cfg, state["params"], scfg)
+    cont = ContinuousEngine(cfg, state["params"], scfg)
+    # compile warmup: every (length, batch) shape each engine will see in
+    # the replay, including the ragged final chunk of each length group
+    counts = {}
+    for it in trace:
+        counts[len(it.prompt)] = counts.get(len(it.prompt), 0) + 1
+    for L, n in sorted(counts.items()):
+        chunk_sizes = {min(args.max_batch, n)}
+        if n % args.max_batch:
+            chunk_sizes.add(n % args.max_batch)
+        for b in chunk_sizes:
+            fixed.generate([np.zeros(L, np.int32)] * b, 2)
+        cont.generate([np.zeros(L, np.int32)], 2)
+
+    # best-of-N replays: the container is single-core, so one stray GC or
+    # sidecar wakeup can swing a ~1.5s replay; min is the standard estimator
+    f_wall, f_useful, f_ttft = min(
+        (run_fixed(fixed, trace, args.max_batch) for _ in range(args.reps)),
+        key=lambda r: r[0])
+    c_wall, c_useful, c_ttft = min(
+        (run_continuous(cont, trace) for _ in range(args.reps)),
+        key=lambda r: r[0])
+    f_tps, c_tps = f_useful / f_wall, c_useful / c_wall
+
+    print(f"trace: {len(trace)} requests, prompt lens 8/16, "
+          f"geometric budgets 2..64, slots={args.max_batch}")
+    print(f"{'engine':<12} {'wall_s':>8} {'useful_tok':>10} "
+          f"{'tok/s':>8} {'mean_ttft_ms':>12}")
+    print(f"{'fixed':<12} {f_wall:>8.2f} {f_useful:>10d} "
+          f"{f_tps:>8.1f} {1e3*f_ttft:>12.0f}")
+    print(f"{'continuous':<12} {c_wall:>8.2f} {c_useful:>10d} "
+          f"{c_tps:>8.1f} {1e3*c_ttft:>12.0f}")
+    print(f"speedup: {c_tps/f_tps:.2f}x useful-token throughput")
+    cont.close()
+    assert c_tps > f_tps, (
+        f"continuous ({c_tps:.1f} tok/s) must beat fixed ({f_tps:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

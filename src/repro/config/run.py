@@ -77,10 +77,18 @@ class TrainConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
+    """Serving knobs.  ``max_batch`` is the fixed decode width (slot count);
+    the admission plane fills/evicts slots between decode steps."""
     max_batch: int = 8
-    max_seq_len: int = 1024
+    max_seq_len: int = 1024          # decode-state capacity per slot
     prefill_chunk: int = 512
     temperature: float = 0.0         # 0 -> greedy
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
+    # Continuous-batching admission plane
+    max_queue: int = 64              # bounded request queue (backpressure)
+    eos_id: int = -1                 # -1 -> no EOS eviction
+    prefill_buckets: Tuple[int, ...] = (16, 32, 64, 128, 256, 512)
+    result_shards: int = 4           # ShardedStore endpoints for results
+    stats_every: int = 64            # engine-stats snapshot period (steps)

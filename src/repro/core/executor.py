@@ -71,6 +71,11 @@ class BackgroundExecutor:
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._dropped = 0
+        # In-flight accounting for drain(): counts accepted-but-unfinished
+        # tasks under a condition variable (queue.Queue.unfinished_tasks is
+        # undocumented, and join() has no timeout).
+        self._cv = threading.Condition()
+        self._inflight = 0
         self._threads = [
             threading.Thread(target=self._worker, daemon=True,
                              name=f"sidecar-{i}")
@@ -89,6 +94,8 @@ class BackgroundExecutor:
                 except Exception:
                     pass
         task = _Task(name, fn, arrays, self.max_retries)
+        with self._cv:
+            self._inflight += 1       # count before enqueue: no drain races
         while True:
             try:
                 self._q.put_nowait(task)
@@ -103,6 +110,7 @@ class BackgroundExecutor:
                     with self._lock:
                         self._dropped += 1
                         self._history.append(task.record)
+                    self._finish_one()
                     return task
                 # drop_oldest
                 try:
@@ -112,8 +120,14 @@ class BackgroundExecutor:
                     with self._lock:
                         self._dropped += 1
                         self._history.append(old.record)
+                    self._finish_one()
                 except queue.Empty:
                     pass
+
+    def _finish_one(self) -> None:
+        with self._cv:
+            self._inflight -= 1
+            self._cv.notify_all()
 
     def _worker(self):
         while not self._stop.is_set():
@@ -143,17 +157,16 @@ class BackgroundExecutor:
             task.done.set()
             with self._lock:
                 self._history.append(task.record)
-            self._q.task_done()
+            self._finish_one()        # after history: drain()==True implies
+            self._q.task_done()       # records are visible
 
     # -- introspection / lifecycle ----------------------------------------------
     def drain(self, timeout: float = 30.0) -> bool:
-        """Wait for all submitted work (checkpoint barrier at shutdown)."""
-        deadline = time.time() + timeout
-        while time.time() < deadline:
-            if self._q.unfinished_tasks == 0:
-                return True
-            time.sleep(0.01)
-        return False
+        """Wait (with timeout) until every accepted task has finished —
+        the checkpoint barrier at shutdown.  ``queue.join()`` semantics, but
+        interruptible: returns False if work is still in flight at timeout."""
+        with self._cv:
+            return self._cv.wait_for(lambda: self._inflight == 0, timeout)
 
     def stats(self) -> Dict[str, Any]:
         with self._lock:

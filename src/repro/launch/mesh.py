@@ -43,5 +43,5 @@ def _mesh(shape, axes):
         from jax.sharding import AxisType
         return jax.make_mesh(shape, axes, devices=devs[:n],
                              axis_types=(AxisType.Auto,) * len(axes))
-    except TypeError:
+    except (ImportError, TypeError):    # older jax: no AxisType / kwarg
         return Mesh(np.asarray(devs[:n]).reshape(shape), axes)

@@ -1,7 +1,11 @@
-"""Serving CLI: batched generation with KV caches.
+"""Serving CLI: continuous batching over a mixed-length request stream.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch repro-tiny --batch 4 \
-      --prompt-len 32 --new-tokens 16
+  PYTHONPATH=src python -m repro.launch.serve --arch repro-tiny \
+      --requests 16 --mean-prompt-len 32 --mean-new-tokens 16
+
+Requests with random prompt lengths / token budgets are submitted through the
+admission plane; the engine interleaves them over the fixed-shape decode
+batch and reports per-request TTFT plus aggregate throughput.
 """
 from __future__ import annotations
 
@@ -12,7 +16,8 @@ import jax
 import numpy as np
 
 from repro.config import ServeConfig, TrainConfig, get_config
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ContinuousEngine, QueueFull
+from repro.serve.sampler import SamplingParams
 from repro.train.steps import init_train_state
 
 
@@ -20,9 +25,10 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="repro-tiny")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--mean-prompt-len", type=int, default=32)
+    ap.add_argument("--mean-new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -31,25 +37,47 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
     state = init_train_state(jax.random.PRNGKey(args.seed), cfg, TrainConfig())
-    eng = ServeEngine(cfg, state["params"],
-                      ServeConfig(temperature=args.temperature,
-                                  seed=args.seed))
+    scfg = ServeConfig(max_batch=args.max_batch,
+                       temperature=args.temperature, seed=args.seed)
+    eng = ContinuousEngine(cfg, state["params"], scfg)
+    sampling = SamplingParams.from_config(scfg)
+
     rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32)
-               for _ in range(args.batch)]
-    fe = None
+    lens = np.clip(rng.poisson(args.mean_prompt_len, args.requests), 1, 256)
+    news = np.clip(rng.poisson(args.mean_new_tokens, args.requests), 1, 128)
+    fe_shape = None
     if cfg.frontend != "none":
-        fe = rng.standard_normal(
-            (args.batch, cfg.frontend_seq_len, cfg.frontend_dim)
-        ).astype(np.float32)
+        fe_shape = (1, cfg.frontend_seq_len, cfg.frontend_dim)
+
     t0 = time.time()
-    reqs = eng.generate(prompts, args.new_tokens, frontend_embeds=fe)
+    rids = []
+    for L, n in zip(lens, news):
+        prompt = rng.integers(0, cfg.vocab_size, int(L)).astype(np.int32)
+        fe = (rng.standard_normal(fe_shape).astype(np.float32)
+              if fe_shape else None)
+        while True:
+            try:
+                rids.append(eng.submit(prompt, int(n), sampling,
+                                       frontend_embeds=fe))
+                break
+            except QueueFull:
+                eng.step()
+    eng.run()
+    eng.executor.drain()
     dt = time.time() - t0
-    total_new = sum(len(r.output) for r in reqs.values())
-    print(f"batch={args.batch} prompt={args.prompt_len} new={args.new_tokens}")
-    print(f"wall={dt:.2f}s  throughput={total_new/dt:.1f} tok/s")
-    for i, r in sorted(reqs.items())[:4]:
-        print(f"  req{i}: {r.output[:12]}{'...' if len(r.output) > 12 else ''}")
+
+    total_new = sum(len(eng.request(r).output) for r in rids)
+    ttfts = [eng.request(r).first_token_at - eng.request(r).submitted_at
+             for r in rids]
+    print(f"requests={args.requests} slots={args.max_batch} "
+          f"mean_prompt={args.mean_prompt_len} mean_new={args.mean_new_tokens}")
+    print(f"wall={dt:.2f}s  throughput={total_new/dt:.1f} tok/s  "
+          f"mean_ttft={1e3*np.mean(ttfts):.0f}ms  stats={eng.stats()}")
+    for rid in rids[:4]:
+        out = eng.result(rid)
+        print(f"  req{rid}: prompt={out['prompt_len']} "
+              f"tokens={out['tokens'][:10]}{'...' if len(out['tokens']) > 10 else ''}")
+    eng.close()
 
 
 if __name__ == "__main__":

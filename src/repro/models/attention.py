@@ -198,18 +198,22 @@ def self_attention(
 def cache_write(cache: dict, k: jax.Array, v: jax.Array, positions: jax.Array) -> dict:
     """Write S new kv entries at slots ``pos % C`` (ring for SWA caches).
 
-    Assumes batch-aligned positions (all rows share positions[0]); this is the
-    batched-serving regime used by serve_step.
+    Decode (S == 1) writes per row, so a continuously-batched step may hold
+    rows at different absolute positions.  Prefill (S > 1) still assumes
+    batch-aligned positions (all rows share positions[0]) — the admission
+    plane prefills one request at a time.
     """
     C = cache["k"].shape[1]
     S = k.shape[1]
     slots = positions[0] % C                     # (S,)
     if S == 1:
-        slot = slots[0]
-        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-        new_p = jax.lax.dynamic_update_slice(
-            cache["pos"], positions.astype(jnp.int32), (0, slot))
+        B = k.shape[0]
+        rows = jnp.arange(B)
+        row_slots = positions[:, 0] % C          # (B,) — per-row ring slot
+        new_k = cache["k"].at[rows, row_slots].set(k[:, 0])
+        new_v = cache["v"].at[rows, row_slots].set(v[:, 0])
+        new_p = cache["pos"].at[rows, row_slots].set(
+            positions[:, 0].astype(jnp.int32))
     else:
         # prefill: scatter S entries (handles ring wrap when S > C)
         if S >= C:

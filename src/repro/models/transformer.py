@@ -121,6 +121,53 @@ def init_decode_state(cfg: ModelConfig, batch: int, capacity: int) -> Dict[str, 
     return state
 
 
+def insert_decode_slot(state: Dict[str, Any], solo: Dict[str, Any],
+                       slot) -> Dict[str, Any]:
+    """Write a batch-1 decode state into row ``slot`` of a batched state.
+
+    This is the device half of continuous batching: the admission plane
+    prefills a request solo, then splices its caches/recurrent state into the
+    running batch between decode steps.  Stacked ("slots") leaves carry the
+    batch on axis 1 (axis 0 is the scan repetition), unstacked ("tail") and
+    encoder-memory leaves on axis 0.  Both states must share capacity.
+    ``slot`` may be a traced int32 scalar (jit with the batch state donated).
+    """
+    def write_at(axis):
+        def f(dst, src):
+            start = [0] * dst.ndim
+            start[axis] = slot
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), tuple(start))
+        return f
+
+    out: Dict[str, Any] = {
+        "slots": (jax.tree.map(write_at(1), state["slots"], solo["slots"])
+                  if state["slots"] else {}),
+        "tail": jax.tree.map(write_at(0), state["tail"], solo["tail"]),
+        "pos": state["pos"],
+    }
+    if "enc_out" in state:
+        out["enc_out"] = write_at(0)(state["enc_out"], solo["enc_out"])
+    return out
+
+
+def invalidate_positions_from(states: Dict[str, Any], length) -> Dict[str, Any]:
+    """Mark attention-cache entries holding positions >= ``length`` empty.
+
+    Bucket prefill right-pads the prompt; causal masking keeps the pads from
+    corrupting real-token outputs, and this drops the pads' own cache entries
+    (``pos`` -1 == empty) so later decode steps never attend to them.  Works
+    on position *values*, so ring-wrapped SWA caches are handled too.
+    """
+    def f(path, leaf):
+        last = path[-1]
+        if (isinstance(last, jax.tree_util.DictKey) and last.key == "pos"
+                and getattr(leaf, "ndim", 0) >= 2):
+            return jnp.where(leaf < length, leaf, -1)
+        return leaf
+    return jax.tree_util.tree_map_with_path(f, states)
+
+
 # ----------------------------------------------------------------------------
 # Layer stack execution
 # ----------------------------------------------------------------------------

@@ -1,26 +1,54 @@
-"""Batched serving engine: prefill + decode with continuous admission.
+"""Continuous-batching serve engine: sidecar admission plane + fixed fast path.
 
-The host-side request queue is sidecar work (G2): tokenized requests are
-admitted/evicted between device decode steps; the device only ever executes
-the fixed-shape prefill/decode programs.  KV caches follow the model's cache
-semantics (ring buffers for SWA layers, O(1) recurrent state), which is what
-lets the hybrid/SSM archs serve 500k-token contexts at constant memory.
+The split follows the paper's doctrine directly:
+
+  * **Fast path (device)** — exactly three fixed-shape jitted programs: bucket
+    prefill (batch 1, one trace per bucket length), batched decode (always
+    ``max_batch`` wide), and slot insertion.  The device never sees a dynamic
+    shape, so heterogeneous traffic costs no recompiles.
+  * **Admission plane (host, G2)** — a bounded FIFO ``Scheduler`` plus a
+    ``SlotTable``: between decode steps, finished requests are evicted
+    (per-request EOS / max-token), freed slots are recycled, and queued
+    requests are prefilled solo and spliced into the running batch
+    (``insert_decode_slot``) — new arrivals join mid-decode instead of
+    waiting for a full batch to drain.
+  * **Bookkeeping (sidecar, G2)** — latency records, token accounting and
+    periodic engine stats go through ``BackgroundExecutor``; the step loop
+    never blocks on them.
+  * **Results (G3)** — completed generations land in a ``ShardedStore``
+    hash-sharded over peer endpoints, the paper's Redis-slot scheme.
+
+``FixedBatchEngine`` keeps the old drain-the-whole-batch behavior as the
+benchmark baseline (``benchmarks/serve_continuous.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
+import threading
 import time
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.model import ModelConfig
+from repro.config.model import (
+    MIX_ATTN_LOCAL, MIX_RGLRU, MIX_RWKV6, ModelConfig)
 from repro.config.run import ServeConfig
-from repro.models.transformer import ExecPolicy, init_decode_state
-from repro.serve.sampler import sample
-from repro.train.steps import make_decode_step, make_prefill_step
+from repro.core.endpoint import ShardedStore
+from repro.core.executor import BackgroundExecutor
+from repro.models.transformer import (
+    ExecPolicy, init_decode_state, insert_decode_slot)
+from repro.serve.sampler import SamplingParams, sample, sample_slots
+from repro.train.steps import (
+    make_bucket_prefill_step, make_decode_step, make_prefill_step)
+
+
+class QueueFull(RuntimeError):
+    """Raised on submit when the bounded admission queue is at capacity."""
 
 
 @dataclasses.dataclass
@@ -28,14 +56,383 @@ class Request:
     rid: int
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    frontend_embeds: Optional[np.ndarray] = None   # (1, M, F)
     submitted_at: float = dataclasses.field(default_factory=time.time)
     first_token_at: float = 0.0
     finished_at: float = 0.0
+    slot: int = -1
     output: List[int] = dataclasses.field(default_factory=list)
 
+    @property
+    def done(self) -> bool:
+        return self.finished_at > 0.0
 
-class ServeEngine:
-    """Fixed-batch engine: pads the active set to ``max_batch``."""
+
+class SlotTable:
+    """Fixed-width slot bookkeeping for the decode batch.
+
+    Admission always takes the *lowest* free index and eviction returns it,
+    so slot assignment is deterministic — the admission/eviction ordering
+    tests pin this down.
+    """
+
+    def __init__(self, width: int):
+        self.width = width
+        self._req: List[Optional[Request]] = [None] * width
+        self._free: List[int] = list(range(width))
+        heapq.heapify(self._free)
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def acquire(self, req: Request) -> int:
+        slot = heapq.heappop(self._free)
+        self._req[slot] = req
+        req.slot = slot
+        return slot
+
+    def release(self, slot: int) -> None:
+        assert self._req[slot] is not None, f"slot {slot} already free"
+        self._req[slot] = None
+        heapq.heappush(self._free, slot)
+
+    def active(self) -> List[Request]:
+        return [r for r in self._req if r is not None]
+
+
+def needs_exact_prefill(cfg: ModelConfig) -> bool:
+    """Archs whose decode state a right-padded prefill would pollute.
+
+    Recurrent mixers fold every (pad) token into O(1) state, and SWA ring
+    caches can be fully overwritten by pads; global-attention caches only
+    need the pads' entries invalidated, which the bucket prefill does.
+
+    Tradeoff: exact-prefill archs ignore ``prefill_buckets`` and retrace the
+    admit program once per *distinct prompt length* (a compile stall on each
+    new length, and an unbounded trace cache on a long-lived server).
+    Callers serving such archs should quantize prompt lengths themselves, or
+    accept the compile cost.
+    """
+    return (any(k in (MIX_RGLRU, MIX_RWKV6, MIX_ATTN_LOCAL)
+                for k in cfg.pattern)
+            or cfg.mlp_kind == "rwkv_cmix")
+
+
+class Scheduler:
+    """Host-side admission queue: bounded FIFO + prefill length bucketing."""
+
+    def __init__(self, scfg: ServeConfig, exact_buckets: bool = False):
+        self.max_queue = scfg.max_queue
+        self.buckets = tuple(sorted(scfg.prefill_buckets))
+        self.exact = exact_buckets
+        self._dq: "deque[Request]" = deque()
+
+    def push(self, req: Request) -> None:
+        if len(self._dq) >= self.max_queue:
+            raise QueueFull(
+                f"admission queue full ({self.max_queue}); retry after step()")
+        self._dq.append(req)
+
+    def pop(self) -> Request:
+        return self._dq.popleft()
+
+    def depth(self) -> int:
+        return len(self._dq)
+
+    def empty(self) -> bool:
+        return not self._dq
+
+    def bucket_for(self, length: int) -> int:
+        if self.exact:
+            return length
+        for b in self.buckets:
+            if b >= length:
+                return b
+        return length
+
+
+def _make_admit_program(cfg: ModelConfig, policy: ExecPolicy, capacity: int):
+    """One fused device program per admission: init a fresh solo state,
+    bucket-prefill the prompt, sample the first token, splice the state into
+    the running batch at ``slot``, and update the device-resident per-slot
+    mirrors (token / position / sampling params).  One dispatch per
+    admission is what lets tiny-step serving amortize host overhead (the G2
+    fast-path rule)."""
+    prefill = make_bucket_prefill_step(cfg, policy)
+
+    def admit(params, states, batch, slot, key, mirrors):
+        solo = init_decode_state(cfg, 1, capacity)
+        solo, last_logits = prefill(params, solo, batch)
+        tok, key = sample_slots(last_logits, key, batch["temp"][None],
+                                batch["top_k"][None], batch["top_p"][None])
+        states = insert_decode_slot(states, solo, slot)
+        mirrors = {
+            "tok": mirrors["tok"].at[slot].set(tok[0]),
+            "pos": mirrors["pos"].at[slot].set(batch["length"]),
+            "temp": mirrors["temp"].at[slot].set(batch["temp"]),
+            "top_k": mirrors["top_k"].at[slot].set(batch["top_k"]),
+            "top_p": mirrors["top_p"].at[slot].set(batch["top_p"]),
+        }
+        return states, tok, key, mirrors
+    return admit
+
+
+def _make_decode_program(cfg: ModelConfig, policy: ExecPolicy):
+    """One fused device program per serve step: batched decode + per-slot
+    sampling + key split.  Tokens and positions live in the device-resident
+    ``mirrors``, so the steady-state loop transfers nothing host->device."""
+    decode = make_decode_step(cfg, policy)
+
+    def step(params, states, key, mirrors):
+        batch = {"tokens": mirrors["tok"][:, None],
+                 "positions": mirrors["pos"][:, None]}
+        states, logits = decode(params, states, batch)
+        toks, key = sample_slots(logits, key, mirrors["temp"],
+                                 mirrors["top_k"], mirrors["top_p"])  # (B,)
+        mirrors = dict(mirrors, tok=toks, pos=mirrors["pos"] + 1)
+        return states, toks, key, mirrors
+    return step
+
+
+class ContinuousEngine:
+    """Continuous-batching engine; see module docstring for the G2/G3 split."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 policy: ExecPolicy = ExecPolicy(),
+                 executor: Optional[BackgroundExecutor] = None,
+                 result_endpoints: Optional[Sequence[Any]] = None):
+        self.cfg, self.scfg = cfg, scfg
+        self.params = params
+        self.policy = policy
+        # Fast path: two fixed-shape fused programs (admit retraces once per
+        # bucket length; decode is a single trace).  Donations keep the batch
+        # state and per-slot mirrors updated in place.
+        self._admit_prog = jax.jit(
+            _make_admit_program(cfg, policy, scfg.max_seq_len),
+            donate_argnums=(1, 5))
+        self._decode_prog = jax.jit(_make_decode_program(cfg, policy),
+                                    donate_argnums=(1, 3))
+        self._key = jax.random.PRNGKey(scfg.seed)
+
+        B = scfg.max_batch
+        self.states = init_decode_state(cfg, B, capacity=scfg.max_seq_len)
+        self.slots = SlotTable(B)
+        self.scheduler = Scheduler(scfg, exact_buckets=needs_exact_prefill(cfg))
+        # Per-slot mirrors live on device (see _make_decode_program); the
+        # host only keeps what its eviction logic reads.
+        self._mirrors = {
+            "tok": jnp.zeros(B, jnp.int32),
+            "pos": jnp.zeros(B, jnp.int32),
+            "temp": jnp.zeros(B, jnp.float32),
+            "top_k": jnp.zeros(B, jnp.int32),
+            "top_p": jnp.ones(B, jnp.float32),
+        }
+        self._eos = np.full(B, -1, np.int32)
+        self._host_temps = np.zeros(B, np.float32)
+
+        # Sidecar plane (G2) + sharded result store (G3).
+        self._own_executor = executor is None
+        self.executor = executor or BackgroundExecutor(
+            num_threads=2, max_inflight=8, backpressure="block")
+        endpoints = (list(result_endpoints) if result_endpoints is not None
+                     else [dict() for _ in range(max(1, scfg.result_shards))])
+        self.store = ShardedStore(endpoints)
+        # slot->endpoint ownership is static; compute the balance once so
+        # stats() stays O(1) on the decode loop
+        self._shard_balance = self.store.balance()
+        self.records: List[Dict[str, Any]] = []
+        self.stats_log: List[Dict[str, Any]] = []
+        self._records_lock = threading.Lock()
+
+        self._rid = itertools.count()
+        self._requests: Dict[int, Request] = {}
+        self._steps = 0
+        self._tokens_out = 0
+
+    # -- request lifecycle ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               sampling: Optional[SamplingParams] = None,
+               frontend_embeds: Optional[np.ndarray] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if len(prompt) + max_new_tokens > self.scfg.max_seq_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_seq_len ({self.scfg.max_seq_len})")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        req = Request(next(self._rid), prompt, max_new_tokens,
+                      sampling or SamplingParams.from_config(self.scfg),
+                      frontend_embeds=frontend_embeds)
+        self.scheduler.push(req)          # raises QueueFull at capacity
+        self._requests[req.rid] = req
+        return req.rid
+
+    def _admit(self) -> int:
+        """Fill free slots from the queue: solo bucket prefill, sample the
+        first token, splice the state into the running batch."""
+        admitted = 0
+        while self.slots.free_count() and not self.scheduler.empty():
+            req = self.scheduler.pop()
+            L = len(req.prompt)
+            # Clamp the bucket to the decode-state capacity: a bucket larger
+            # than capacity would ring-wrap the prefill and silently drop the
+            # head of the prompt's cache (submit() guarantees L fits).
+            S = max(min(self.scheduler.bucket_for(L), self.scfg.max_seq_len),
+                    L, 1)
+            toks = np.zeros((1, S), np.int32)
+            toks[0, :L] = req.prompt
+            positions = np.arange(S, dtype=np.int32)[None, :]
+            sp = req.sampling
+            batch = {"tokens": jnp.asarray(toks),
+                     "positions": jnp.asarray(positions),
+                     "length": jnp.asarray(L, jnp.int32),
+                     "temp": jnp.asarray(sp.temperature, jnp.float32),
+                     "top_k": jnp.asarray(sp.top_k, jnp.int32),
+                     "top_p": jnp.asarray(sp.top_p, jnp.float32)}
+            if req.frontend_embeds is not None:
+                batch["frontend_embeds"] = jnp.asarray(req.frontend_embeds)
+            slot = self.slots.acquire(req)
+            self.states, tok, self._key, self._mirrors = self._admit_prog(
+                self.params, self.states, batch,
+                jnp.asarray(slot, jnp.int32), self._key, self._mirrors)
+            tok0 = int(tok[0])
+            req.first_token_at = time.time()
+            req.output.append(tok0)
+            admitted += 1
+            self._eos[slot] = sp.eos_id
+            self._host_temps[slot] = sp.temperature
+            if (sp.eos_id >= 0 and tok0 == sp.eos_id) \
+                    or req.max_new_tokens <= 1:
+                self._release_slot(slot)  # finished during admission
+                self._finish(req)
+        return admitted
+
+    def _release_slot(self, slot: int) -> None:
+        self.slots.release(slot)
+        # Zero the freed slot's device temperature so an all-greedy batch
+        # regains the cheap argmax sampling path (a stale temp > 0 would
+        # force the stochastic branch on every later step).
+        if self._host_temps[slot] > 0.0:
+            self._host_temps[slot] = 0.0
+            self._mirrors = dict(self._mirrors,
+                                 temp=jnp.asarray(self._host_temps))
+
+    def _decode_once(self) -> bool:
+        """One batched decode step over all slots + per-slot evictions."""
+        active = self.slots.active()
+        if not active:
+            return False
+        self.states, toks_dev, self._key, self._mirrors = self._decode_prog(
+            self.params, self.states, self._key, self._mirrors)
+        toks = np.asarray(toks_dev)
+        for req in active:
+            slot = req.slot
+            tok = int(toks[slot])
+            req.output.append(tok)
+            self._tokens_out += 1
+            if (self._eos[slot] >= 0 and tok == self._eos[slot]) \
+                    or len(req.output) >= req.max_new_tokens:
+                self._release_slot(slot)
+                self._finish(req)
+        self._steps += 1
+        if self.scfg.stats_every and self._steps % self.scfg.stats_every == 0:
+            snap = self.stats()
+            self.executor.submit("serve.stats",
+                                 lambda s=snap: self.stats_log.append(s))
+        return True
+
+    def step(self) -> bool:
+        """Admit + one decode step.  Returns False once fully idle."""
+        admitted = self._admit()
+        return self._decode_once() or admitted > 0
+
+    def run(self) -> None:
+        """Drive until queue and slots are empty (the serve loop)."""
+        while self.step():
+            pass
+
+    def _finish(self, req: Request) -> None:
+        req.finished_at = time.time()
+        payload = {
+            "rid": req.rid,
+            "tokens": list(req.output),
+            "prompt_len": int(len(req.prompt)),
+            "ttft_s": req.first_token_at - req.submitted_at,
+            "e2e_s": req.finished_at - req.submitted_at,
+        }
+        # Latency-insensitive bookkeeping rides the sidecar (G2): the store
+        # write + latency record never block the decode loop.
+        self.executor.submit(f"serve.record/{req.rid}", self._record, payload)
+
+    def _record(self, payload: Dict[str, Any]) -> None:
+        self.store.put(f"req/{payload['rid']}", payload)
+        with self._records_lock:
+            self.records.append(payload)
+
+    # -- results / introspection ----------------------------------------------
+    def result(self, rid: int, wait: bool = True) -> Dict[str, Any]:
+        """Fetch a completed generation from the sharded result store."""
+        if wait and not self.executor.drain():
+            raise TimeoutError(
+                f"sidecar drain timed out before req/{rid} was recorded")
+        req = self._requests.get(rid)
+        if req is not None and not req.done:
+            raise RuntimeError(
+                f"request {rid} is still queued/decoding; drive step()/run() "
+                "to completion before fetching its result")
+        return self.store.get(f"req/{rid}")
+
+    def request(self, rid: int) -> Request:
+        return self._requests[rid]
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "steps": self._steps,
+            "tokens_out": self._tokens_out,
+            "active": len(self.slots.active()),
+            "queued": self.scheduler.depth(),
+            "free_slots": self.slots.free_count(),
+            "result_shards": self._shard_balance,
+        }
+
+    def close(self) -> None:
+        self.executor.drain()
+        if self._own_executor:
+            self.executor.shutdown(drain=False)
+
+    # -- batch convenience (old ServeEngine.generate API) ----------------------
+    def generate(self, prompts: List[np.ndarray], max_new_tokens: int,
+                 frontend_embeds: Optional[np.ndarray] = None
+                 ) -> Dict[int, Request]:
+        """Submit a list of prompts and drive to completion.  Returns
+        {index -> Request}, matching the old fixed-batch engine's API."""
+        out: Dict[int, Request] = {}
+        for i, p in enumerate(prompts):
+            fe = (np.asarray(frontend_embeds[i:i + 1])
+                  if frontend_embeds is not None else None)
+            while True:
+                try:
+                    rid = self.submit(p, max_new_tokens, frontend_embeds=fe)
+                    break
+                except QueueFull:
+                    self.step()           # make room: drain one decode step
+            out[i] = self._requests[rid]
+        self.run()
+        self.executor.drain()
+        return out
+
+
+# The continuous engine is the default serving entry point.
+ServeEngine = ContinuousEngine
+
+
+class FixedBatchEngine:
+    """Old drain-the-whole-batch engine: pads the active set to ``max_batch``
+    and runs every request to the same horizon.  Kept as the benchmark
+    baseline for ``benchmarks/serve_continuous.py``."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  policy: ExecPolicy = ExecPolicy()):
@@ -50,13 +447,13 @@ class ServeEngine:
                  frontend_embeds: Optional[np.ndarray] = None
                  ) -> Dict[int, Request]:
         """Batched generation.  Prompts must be equal length (the engine runs
-        fixed-shape programs; the host-side admission layer is responsible for
-        length-bucketing — standard batch-serving practice)."""
+        fixed-shape programs; host-side length bucketing is the caller's
+        job — the limitation the continuous engine removes)."""
         B = len(prompts)
         lens = {len(p) for p in prompts}
         if len(lens) != 1:
-            raise ValueError("ServeEngine batches must be length-bucketed; "
-                             f"got lengths {sorted(lens)}")
+            raise ValueError("FixedBatchEngine batches must be "
+                             f"length-bucketed; got lengths {sorted(lens)}")
         S = max(lens.pop(), 1)
         reqs = {i: Request(i, np.asarray(p, np.int32), max_new_tokens)
                 for i, p in enumerate(prompts)}
@@ -64,8 +461,11 @@ class ServeEngine:
         positions = np.broadcast_to(
             np.arange(S, dtype=np.int32)[None, :], (B, S)).copy()
 
+        # Fixed capacity keeps prefill/decode shapes stable across calls
+        # (capacity=S+max_new would retrace per horizon).
         states = init_decode_state(
-            self.cfg, B, capacity=S + max_new_tokens)
+            self.cfg, B, capacity=max(self.scfg.max_seq_len,
+                                      S + max_new_tokens))
         batch = {"tokens": jnp.asarray(toks),
                  "positions": jnp.asarray(positions)}
         if frontend_embeds is not None:

@@ -1,25 +1,100 @@
-"""Token sampling: greedy / temperature / top-k / top-p."""
+"""Token sampling: greedy / temperature / top-k / top-p.
+
+Two entry points:
+
+  * ``sample`` — batch-uniform params from a ``ServeConfig`` (fixed-batch
+    engine, eval loops).
+  * ``sample_slots`` — per-slot parameter *arrays*, so one fixed-shape jitted
+    program serves a continuously-batched decode step where every slot may
+    carry a different request (different temperature / top-k / top-p, greedy
+    and stochastic mixed in the same batch).
+
+EOS handling is per-slot too, but host-side: the admission plane compares
+each sampled token against its request's ``SamplingParams.eos_id`` and evicts
+the slot the step it hits (see ``serve.engine``).
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.config.run import ServeConfig
 
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs (defaults come from the engine's config)."""
+    temperature: float = 0.0         # <= 0 -> greedy
+    top_k: int = 0                   # 0 -> disabled
+    top_p: float = 1.0               # 1 -> disabled
+    eos_id: int = -1                 # -1 -> never stops on EOS
+
+    @staticmethod
+    def from_config(scfg: ServeConfig) -> "SamplingParams":
+        return SamplingParams(temperature=scfg.temperature, top_k=scfg.top_k,
+                              top_p=scfg.top_p, eos_id=scfg.eos_id)
+
 
 def sample(logits: jax.Array, key, scfg: ServeConfig) -> jax.Array:
-    """logits (B, V) -> tokens (B,) int32."""
+    """logits (B, V) -> tokens (B,) int32 with batch-uniform params."""
     if scfg.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / scfg.temperature
     if scfg.top_k > 0:
         kth = jnp.sort(logits, axis=-1)[:, -scfg.top_k][:, None]
-        logits = jnp.where(logits < kth, -1e30, logits)
+        logits = jnp.where(logits < kth, NEG_INF, logits)
     if scfg.top_p < 1.0:
         sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
         probs = jax.nn.softmax(sorted_logits, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
         cutoff_idx = jnp.sum(cum < scfg.top_p, axis=-1, keepdims=True)
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
-        logits = jnp.where(logits < cutoff, -1e30, logits)
+        logits = jnp.where(logits < cutoff, NEG_INF, logits)
     return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def _stochastic_slots(logits: jax.Array, key, temperature: jax.Array,
+                      top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Row-wise temperature / top-k / top-p sampling (the expensive path)."""
+    V = logits.shape[-1]
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    # top-k: threshold at each row's k-th largest (disabled rows keep all)
+    k = jnp.clip(top_k, 0, V)
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(desc, jnp.clip(k - 1, 0, V - 1)[:, None], axis=-1)
+    scaled = jnp.where((k[:, None] > 0) & (scaled < kth), NEG_INF, scaled)
+    # top-p on the (possibly top-k-filtered) logits
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(jax.nn.softmax(desc, axis=-1), axis=-1)
+    cutoff_idx = jnp.sum(cum < top_p[:, None], axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(desc, jnp.clip(cutoff_idx, 0, V - 1), axis=-1)
+    scaled = jnp.where((top_p[:, None] < 1.0) & (scaled < cutoff),
+                       NEG_INF, scaled)
+    return jax.random.categorical(key, scaled).astype(jnp.int32)
+
+
+def sample_slots(logits: jax.Array, key, temperature: jax.Array,
+                 top_k: jax.Array, top_p: jax.Array):
+    """logits (B, V) + per-slot (B,) params -> ((B,) int32 tokens, new key).
+
+    Rows with ``temperature <= 0`` decode greedily; filters are applied
+    row-wise so the whole heterogeneous batch is one fixed-shape program.
+    The stochastic path (sorts + categorical + key advance) only executes
+    when some slot actually samples — an all-greedy decode step is just an
+    argmax, which keeps the fused serve step cheap.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def stoch(k):
+        k, sk = jax.random.split(k)
+        toks = _stochastic_slots(logits, sk, temperature, top_k, top_p)
+        return jnp.where(temperature <= 0.0, greedy, toks), k
+
+    def skip(k):
+        return greedy, k
+
+    return jax.lax.cond(jnp.any(temperature > 0.0), stoch, skip, key)

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from repro.config.model import ModelConfig
 from repro.config.run import TrainConfig
 from repro.models.transformer import (
-    ExecPolicy, forward, init_decode_state, init_params)
+    ExecPolicy, forward, init_decode_state, init_params,
+    invalidate_positions_from)
 from repro.train import compression as comp
 from repro.train import optimizer as opt
 from repro.train.losses import chunked_xent
@@ -140,6 +141,31 @@ def make_prefill_step(cfg: ModelConfig, policy: ExecPolicy = ExecPolicy()):
             params, cfg, batch["tokens"], batch.get("positions"),
             policy=policy, states=states, **kw)
         return new_states, logits[:, -1]
+    return prefill_step
+
+
+def make_bucket_prefill_step(cfg: ModelConfig,
+                             policy: ExecPolicy = ExecPolicy()):
+    """Solo prefill for the continuous-batching admission plane.
+
+    ``batch["tokens"]`` is a right-padded (1, S) bucket; ``batch["length"]``
+    the true prompt length.  Returns the state with pad cache entries
+    invalidated (and ``pos`` set to the true length) plus the logits at the
+    last *real* token — the fixed shape is the bucket, so one trace serves
+    every prompt admitted through that bucket.
+    """
+    def prefill_step(params, states, batch):
+        kw = {}
+        if "frontend_embeds" in batch:
+            kw["frontend_embeds"] = batch["frontend_embeds"]
+        logits, new_states, _ = forward(
+            params, cfg, batch["tokens"], batch.get("positions"),
+            policy=policy, states=states, **kw)
+        length = batch["length"]                       # () int32
+        new_states = invalidate_positions_from(new_states, length)
+        new_states["pos"] = length.astype(jnp.int32)
+        last = jax.lax.dynamic_slice_in_dim(logits, length - 1, 1, axis=1)
+        return new_states, last[:, 0]
     return prefill_step
 
 

@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")   # dev-only extra; module is all
+from hypothesis import given, settings, strategies as st  # property-based
 
 from repro.config import OffloadConfig
 from repro.core.characterize import SidecarProfile
