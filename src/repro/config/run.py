@@ -92,3 +92,11 @@ class ServeConfig:
     prefill_buckets: Tuple[int, ...] = (16, 32, 64, 128, 256, 512)
     result_shards: int = 4           # ShardedStore endpoints for results
     stats_every: int = 64            # engine-stats snapshot period (steps)
+    # Paged KV-cache (PagedEngine): fixed-size pages + block tables instead
+    # of a dense per-slot cache; memory scales with live tokens.
+    page_size: int = 16              # tokens per physical KV page
+    num_pages: int = 0               # pool size; 0 -> full residency for
+    #                                  every slot (max_batch * pages_per_seq)
+    prefix_cache: bool = True        # hash-keyed prefix page sharing (CoW)
+    cold_pages: int = 256            # host-tier spill capacity (pages);
+    #                                  0 disables the tiered-memory plane

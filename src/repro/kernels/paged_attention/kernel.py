@@ -1,0 +1,116 @@
+"""Pallas TPU paged-attention decode kernel.
+
+Per (batch row, kv head) the kernel walks the row's block table: the minor
+grid axis iterates logical pages, and ``PrefetchScalarGridSpec`` makes the
+block table available to the *index maps*, so each K/V block is DMA'd
+straight from its physical page in the pool — decode reads through the block
+table without ever materializing a contiguous (B, T) cache view (that
+materialization is exactly what the pure-JAX reference does, and what this
+kernel exists to avoid).
+
+Same TPU shape as the flash kernel (see flash_attention/kernel.py): the
+online-softmax running (m, l, acc) live in VMEM scratch across the
+sequentially-executed minor grid axis, and pages past a row's length are
+predicated off with ``pl.when`` so dead pages cost no MXU work.
+
+Layouts: q (B, J, G, N) one token per row; kp/vp (P, page, J, N);
+table (B*M,) flattened + lengths (B,) as scalar-prefetch operands.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page: int, n_pages: int):
+    b = pl.program_id(0)
+    m = pl.program_id(2)
+
+    @pl.when(m == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    t0 = m * page
+
+    @pl.when(t0 < length)                 # pages past the row's length: dead
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, N), pre-scaled
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (page, N)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G,page)
+        tpos = t0 + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(tpos < length, s, NEG_INF)     # partial tail page
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    @pl.when(m == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_bjgn(
+    q: jax.Array,          # (B, J, G, N)
+    kp: jax.Array,         # (P, page, J, N)
+    vp: jax.Array,         # (P, page, J, N)
+    table: jax.Array,      # (B, M) int32
+    lengths: jax.Array,    # (B,) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:            # (B, J, G, N)
+    B, J, G, N = q.shape
+    page = kp.shape[1]
+    M = table.shape[1]
+    kernel = functools.partial(_paged_kernel, page=page, n_pages=M)
+
+    # Index maps see the scalar-prefetch refs after the grid indices; the kv
+    # map reads the block table to pick the physical page for (row b, page m).
+    def q_map(b, j, m, table_ref, len_ref):
+        return (b, j, 0, 0)
+
+    def kv_map(b, j, m, table_ref, len_ref):
+        return (table_ref[b * M + m], 0, j, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, J, M),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, N), q_map),
+            pl.BlockSpec((1, page, 1, N), kv_map),
+            pl.BlockSpec((1, page, 1, N), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, N), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, N), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, J, G, N), q.dtype),
+        interpret=interpret,
+    )(table.reshape(-1).astype(jnp.int32), lengths.astype(jnp.int32),
+      q, kp, vp)

@@ -1,0 +1,39 @@
+"""jit'd wrapper: paged decode attention, kernel-or-oracle dispatch (G1)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_bjgn
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def supported(q, kp, *, cap: float = 0.0) -> bool:
+    """Shape/dtype predicate (narrow-interface contract, like flash)."""
+    if cap and cap > 0.0:
+        return False
+    if q.ndim != 4 or kp.ndim != 4:
+        return False
+    N = q.shape[-1]
+    page = kp.shape[1]
+    return N % 8 == 0 and page % 8 == 0
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def paged_attention(q, kp, vp, table, lengths, *, cap: float = 0.0):
+    """q (B,J,G,N) pre-scaled; pool (P,page,J,N); table (B,M); lengths (B,).
+
+    Kernel path reads K/V page-by-page through the block table (no contiguous
+    materialization); callers gate on ``supported`` and fall back to
+    ``paged_attention_ref`` — the oracle the parity tests diff against."""
+    del cap  # kernel path requires cap == 0 (see supported())
+    return paged_attention_bjgn(q, kp, vp, table, lengths,
+                                interpret=_interpret())
+
+
+__all__ = ["paged_attention", "paged_attention_ref", "supported"]

@@ -1,0 +1,43 @@
+"""Pure-JAX paged-attention reference (the oracle the Pallas kernel diffs
+against, and the XLA decode path on non-TPU backends).
+
+Decode-step attention where K/V live in a shared physical page pool instead
+of a per-slot contiguous buffer:
+
+  q        (B, J, G, N)   one query token per batch row, pre-scaled
+  kp, vp   (P, page, J, N) physical page pool (page 0 = scratch)
+  table    (B, M)          block table: logical page -> physical page
+  lengths  (B,)            valid entries per row (current pos + 1)
+
+The gather materializes each row's logical (M*page) view and defers to the
+same ``attend`` the dense cache path uses, so for identical pool content the
+reference is bit-identical to dense-cache decode — that is the property the
+engine equivalence tests pin down.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attend
+
+
+def paged_attention_ref(
+    q: jax.Array,          # (B, J, G, N)
+    kp: jax.Array,         # (P, page, J, N)
+    vp: jax.Array,         # (P, page, J, N)
+    table: jax.Array,      # (B, M) int32
+    lengths: jax.Array,    # (B,) int32
+    *,
+    cap: float = 0.0,
+) -> jax.Array:            # (B, J, G, N)
+    B, M = table.shape
+    page = kp.shape[1]
+    T = M * page
+    kg = kp[table].reshape(B, T, *kp.shape[2:])     # (B, T, J, N)
+    vg = vp[table].reshape(B, T, *vp.shape[2:])
+    t = jnp.arange(T, dtype=jnp.int32)[None, :]
+    k_pos = jnp.where(t < lengths[:, None], t, -1)  # -1 = empty, like dense
+    q_pos = (lengths[:, None] - 1).astype(jnp.int32)
+    out = attend(q[:, None], kg, vg, q_pos, k_pos, causal=True, cap=cap)
+    return out[:, 0]

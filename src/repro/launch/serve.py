@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.config import ServeConfig, TrainConfig, get_config
-from repro.serve.engine import ContinuousEngine, QueueFull
+from repro.serve.engine import ContinuousEngine, PagedEngine, QueueFull
 from repro.serve.sampler import SamplingParams
 from repro.train.steps import init_train_state
 
@@ -31,6 +31,13 @@ def main() -> None:
     ap.add_argument("--mean-new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache engine (block tables + prefix "
+                         "reuse + cold-tier spill); global-attn archs only")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV pool pages (0 -> full residency per slot)")
+    ap.add_argument("--no-prefix-cache", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,8 +45,11 @@ def main() -> None:
         cfg = cfg.reduced()
     state = init_train_state(jax.random.PRNGKey(args.seed), cfg, TrainConfig())
     scfg = ServeConfig(max_batch=args.max_batch,
-                       temperature=args.temperature, seed=args.seed)
-    eng = ContinuousEngine(cfg, state["params"], scfg)
+                       temperature=args.temperature, seed=args.seed,
+                       page_size=args.page_size, num_pages=args.num_pages,
+                       prefix_cache=not args.no_prefix_cache)
+    engine_cls = PagedEngine if args.paged else ContinuousEngine
+    eng = engine_cls(cfg, state["params"], scfg)
     sampling = SamplingParams.from_config(scfg)
 
     rng = np.random.default_rng(args.seed)

@@ -166,12 +166,23 @@ def self_attention(
     window: int = 0,
     causal: bool = True,
     cache: Optional[dict] = None,
+    page_table: Optional[jax.Array] = None,   # (B, M) int32 — paged decode
     q_chunk: int = 0,
     kv_chunk: int = 0,
     use_kernel: bool = False,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """Returns (output (B,S,D), updated cache or None)."""
     q, k, v = _project_qkv(params, x, positions, cfg)
+    if cache is not None and "kp" in cache:
+        # Paged decode (S == 1): K/V live in a shared physical page pool and
+        # are addressed through the block table instead of a per-slot buffer.
+        cache = paged_cache_write(cache, k, v, positions, page_table)
+        out = paged_attend(q, cache, positions, page_table,
+                           cap=cfg.attn_logit_softcap, use_kernel=use_kernel)
+        o = jnp.einsum("bsjgn,jgnd->bsd", out,
+                       params["wo"].reshape(cfg.num_kv_heads, -1,
+                                            cfg.head_dim, cfg.d_model))
+        return o, cache
     if cache is None:
         if use_kernel:
             from repro.kernels.flash_attention import ops as fa_ops
@@ -225,6 +236,70 @@ def cache_write(cache: dict, k: jax.Array, v: jax.Array, positions: jax.Array) -
         new_v = cache["v"].at[:, slots].set(v)
         new_p = cache["pos"].at[:, slots].set(positions.astype(jnp.int32))
     return {"k": new_k, "v": new_v, "pos": new_p}
+
+
+# ----------------------------------------------------------------------------
+# Paged cache (block-table addressed physical page pool; serve.kvpool is the
+# host-side allocator, physical page 0 is its reserved scratch page)
+# ----------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype) -> dict:
+    """Physical K/V page pool shared by every slot (one per layer).  There is
+    no per-entry ``pos`` array: validity is positional — entry ``t`` of a
+    row's logical view is live iff ``t < length`` — because pages are written
+    densely from position 0 and never ring-wrap."""
+    j, n = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "kp": jnp.zeros((num_pages, page_size, j, n), dtype),
+        "vp": jnp.zeros((num_pages, page_size, j, n), dtype),
+    }
+
+
+def paged_cache_write(cache: dict, k: jax.Array, v: jax.Array,
+                      positions: jax.Array, table: jax.Array) -> dict:
+    """Decode-step write: row ``b``'s token at position ``p`` lands in
+    physical page ``table[b, p // page]`` at offset ``p % page``.
+
+    Rows whose slot was released have their table row pointed at the scratch
+    page (0) by the admission plane, so their garbage writes never touch a
+    live page; duplicate scratch indices in the scatter are harmless."""
+    B = k.shape[0]
+    page = cache["kp"].shape[1]
+    M = table.shape[1]
+    pos = positions[:, 0]                                   # (B,)
+    rows = jnp.arange(B)
+    logical = jnp.minimum(pos // page, M - 1)               # clamp dead rows
+    phys = table[rows, logical]                             # (B,)
+    off = pos % page
+    return {
+        "kp": cache["kp"].at[phys, off].set(k[:, 0].astype(cache["kp"].dtype)),
+        "vp": cache["vp"].at[phys, off].set(v[:, 0].astype(cache["vp"].dtype)),
+    }
+
+
+def paged_attend(q: jax.Array, cache: dict, positions: jax.Array,
+                 table: jax.Array, *, cap: float = 0.0,
+                 use_kernel: bool = False) -> jax.Array:
+    """Decode attention over the page pool.  q (B, 1, J, G, N) pre-scaled.
+
+    Kernel path (TPU): the Pallas kernel DMAs K/V page-by-page through the
+    block table.  Oracle path: gather the logical view and reuse ``attend``
+    — bit-identical to the dense-cache decode (same shapes, same mask)."""
+    lengths = positions[:, 0] + 1                           # just wrote at pos
+    if use_kernel:
+        from repro.kernels.paged_attention import ops as pa_ops
+        if pa_ops.supported(q[:, 0], cache["kp"], cap=cap):
+            return pa_ops.paged_attention(
+                q[:, 0], cache["kp"], cache["vp"], table, lengths)[:, None]
+    B, M = table.shape
+    page = cache["kp"].shape[1]
+    T = M * page
+    kg = cache["kp"][table].reshape(B, T, *cache["kp"].shape[2:])
+    vg = cache["vp"][table].reshape(B, T, *cache["vp"].shape[2:])
+    t = jnp.arange(T, dtype=jnp.int32)[None, :]
+    k_pos = jnp.where(t < lengths[:, None], t, -1)
+    return attend(q, kg, vg, positions, k_pos, causal=True, cap=cap)
 
 
 # ----------------------------------------------------------------------------

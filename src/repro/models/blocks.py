@@ -75,6 +75,7 @@ def apply_block(
     memory: Optional[jax.Array] = None,   # (B, M, D) cross-attn memory
     state: Optional[dict] = None,
     causal: bool = True,
+    page_table: Optional[jax.Array] = None,   # (B, M) paged-KV block table
     q_chunk: int = 0,
     kv_chunk: int = 0,
     use_kernel: bool = False,
@@ -90,8 +91,8 @@ def apply_block(
         cache = None if state is None else state["cache"]
         out, new_cache = attn_mod.self_attention(
             params["mixer"], h, positions, cfg, window=window, causal=causal,
-            cache=cache, q_chunk=q_chunk, kv_chunk=kv_chunk,
-            use_kernel=use_kernel)
+            cache=cache, page_table=page_table, q_chunk=q_chunk,
+            kv_chunk=kv_chunk, use_kernel=use_kernel)
         x = x + out
         if kind == MIX_ATTN_CROSS:
             hc = rms_norm(x, params["norm_c"], cfg.norm_eps)

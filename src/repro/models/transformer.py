@@ -151,6 +151,155 @@ def insert_decode_slot(state: Dict[str, Any], solo: Dict[str, Any],
     return out
 
 
+# ----------------------------------------------------------------------------
+# Paged decode state (block-table KV paging; see serve.kvpool for the
+# host-side allocator and serve.engine.PagedEngine for the admission plane)
+# ----------------------------------------------------------------------------
+
+def supports_paging(cfg: ModelConfig) -> bool:
+    """Paging covers global-attention decoder-only archs.  Recurrent mixers
+    and SWA ring caches keep the exact-prefill dense path (their O(1)/ring
+    state has no page structure to share), enc-dec and VLM frontends carry
+    non-pageable per-slot memory."""
+    return (all(k == MIX_ATTN for k in cfg.pattern)
+            and not cfg.is_encoder_decoder
+            and cfg.mlp_kind != "rwkv_cmix"
+            and cfg.frontend == "none")
+
+
+def init_paged_decode_state(cfg: ModelConfig, num_pages: int,
+                            page_size: int) -> Dict[str, Any]:
+    """Like ``init_decode_state`` but attention caches are shared physical
+    page pools (no batch axis): slot residency is whatever the block tables
+    map, so memory scales with live tokens instead of slots x max_seq_len."""
+    if not supports_paging(cfg):
+        raise ValueError(f"{cfg.arch_id}: paging needs all-global-attention "
+                         "decoder-only (recurrent/SWA archs keep the dense "
+                         "exact-prefill path)")
+    dtype = dtype_of(cfg.dtype)
+    reps, rem = _reps_rem(cfg)
+    from repro.models import attention as attn_mod
+
+    def pool(lead=()):
+        one = {"cache": attn_mod.init_paged_cache(cfg, num_pages, page_size,
+                                                  dtype)}
+        if not lead:
+            return one
+        return jax.tree.map(
+            lambda a: jnp.zeros(lead + a.shape, a.dtype), one)
+
+    return {
+        "slots": {str(i): pool((reps,)) for i in range(len(cfg.pattern))}
+                 if reps else {},
+        "tail": {str(i): pool() for i in range(rem)},
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def read_page(pstate: Dict[str, Any], page) -> Dict[str, Any]:
+    """Slice physical page ``page`` out of every layer's pool (the spill
+    payload: fresh small buffers, safe to hand to the sidecar while the pool
+    itself keeps being donated through decode steps).  Stacked ("slots")
+    leaves carry the page axis at 1, unstacked ("tail") at 0."""
+    def take(axis):
+        return lambda a: jax.lax.dynamic_index_in_dim(a, page, axis,
+                                                      keepdims=False)
+    return {"slots": jax.tree.map(take(1), pstate["slots"]),
+            "tail": jax.tree.map(take(0), pstate["tail"])}
+
+
+def write_page(pstate: Dict[str, Any], page, blob: Dict[str, Any]
+               ) -> Dict[str, Any]:
+    """Fault a spilled page's content back into every layer's pool."""
+    def put(axis):
+        def f(dst, src):
+            return jax.lax.dynamic_update_index_in_dim(
+                dst, src.astype(dst.dtype), page, axis)
+        return f
+    out = {"slots": jax.tree.map(put(1), pstate["slots"], blob["slots"]),
+           "tail": jax.tree.map(put(0), pstate["tail"], blob["tail"]),
+           "pos": pstate["pos"]}
+    return out
+
+
+def load_prefix_pages(solo: Dict[str, Any], pstate: Dict[str, Any],
+                      table_row, hit_len) -> Dict[str, Any]:
+    """Seed a fresh batch-1 dense decode state with a reused prefix: gather
+    the row's pages from every pool into the solo cache's first ``capacity``
+    entries and mark ``[0, hit_len)`` valid.  Unassigned logical pages point
+    at the scratch page, so the gathered garbage is masked off by ``pos``."""
+    def seed(pool_axis):
+        def f(dense_leaf, pool_leaf):
+            # dense (..., 1, C, J, N) <- pool (..., P, page, J, N)[table_row]
+            gathered = jnp.take(pool_leaf, table_row, axis=pool_axis)
+            new_shape = dense_leaf.shape
+            return gathered.reshape(new_shape).astype(dense_leaf.dtype)
+        return f
+
+    def fix_pos(cache_state):
+        C = cache_state["cache"]["pos"].shape[-1]
+        t = jnp.arange(C, dtype=jnp.int32)
+        pos = jnp.where(t < hit_len, t, -1)
+        cache_state["cache"]["pos"] = jnp.broadcast_to(
+            pos, cache_state["cache"]["pos"].shape)
+        return cache_state
+
+    out = dict(solo)
+    out["slots"] = {
+        i: fix_pos({"cache": {
+            "k": seed(1)(solo["slots"][i]["cache"]["k"],
+                         pstate["slots"][i]["cache"]["kp"]),
+            "v": seed(1)(solo["slots"][i]["cache"]["v"],
+                         pstate["slots"][i]["cache"]["vp"]),
+            "pos": solo["slots"][i]["cache"]["pos"]}})
+        for i in solo["slots"]}
+    out["tail"] = {
+        i: fix_pos({"cache": {
+            "k": seed(0)(solo["tail"][i]["cache"]["k"],
+                         pstate["tail"][i]["cache"]["kp"]),
+            "v": seed(0)(solo["tail"][i]["cache"]["v"],
+                         pstate["tail"][i]["cache"]["vp"]),
+            "pos": solo["tail"][i]["cache"]["pos"]}})
+        for i in solo["tail"]}
+    out["pos"] = jnp.asarray(hit_len, jnp.int32)
+    return out
+
+
+def scatter_solo_pages(pstate: Dict[str, Any], solo: Dict[str, Any],
+                       assign) -> Dict[str, Any]:
+    """Admission's device half: scatter a prefilled solo dense cache into the
+    pools at the pages ``assign`` maps (logical -> physical; scratch page 0
+    for logical pages that were prefix hits or past the allocation, so shared
+    pages are never rewritten)."""
+    def scat(pool_axis):
+        def f(pool_leaf, dense_leaf):
+            page = pool_leaf.shape[pool_axis + 1]
+            M = assign.shape[0]
+            lead = dense_leaf.shape[:pool_axis]          # (reps,) or ()
+            paged = dense_leaf.reshape(
+                lead + (M, page) + dense_leaf.shape[pool_axis + 2:])
+            if pool_axis == 1:
+                return pool_leaf.at[:, assign].set(
+                    paged.astype(pool_leaf.dtype))
+            return pool_leaf.at[assign].set(paged.astype(pool_leaf.dtype))
+        return f
+
+    out = {"slots": {}, "tail": {}, "pos": pstate["pos"]}
+    for i in pstate["slots"]:
+        out["slots"][i] = {"cache": {
+            "kp": scat(1)(pstate["slots"][i]["cache"]["kp"],
+                          solo["slots"][i]["cache"]["k"]),
+            "vp": scat(1)(pstate["slots"][i]["cache"]["vp"],
+                          solo["slots"][i]["cache"]["v"])}}
+    for i in pstate["tail"]:
+        out["tail"][i] = {"cache": {
+            "kp": scat(0)(pstate["tail"][i]["cache"]["kp"],
+                          solo["tail"][i]["cache"]["k"]),
+            "vp": scat(0)(pstate["tail"][i]["cache"]["vp"],
+                          solo["tail"][i]["cache"]["v"])}}
+    return out
+
+
 def invalidate_positions_from(states: Dict[str, Any], length) -> Dict[str, Any]:
     """Mark attention-cache entries holding positions >= ``length`` empty.
 
@@ -184,6 +333,7 @@ def _run_stack(
     memory: Optional[jax.Array] = None,
     states: Optional[dict] = None,     # {"slots": ..., "tail": ...}
     causal: bool = True,
+    page_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
     reps = 0
     if layer_params:
@@ -194,7 +344,7 @@ def _run_stack(
     def apply_one(p, kind, x, st):
         return blk.apply_block(
             p, kind, x, positions, cfg, memory=memory, state=st,
-            causal=causal, q_chunk=qc, kv_chunk=kc,
+            causal=causal, page_table=page_table, q_chunk=qc, kv_chunk=kc,
             use_kernel=policy.use_kernel,
             constrain_recurrence=policy.constrain_recurrence)
 
@@ -296,11 +446,14 @@ def forward(
     policy: ExecPolicy = ExecPolicy(),
     frontend_embeds: Optional[jax.Array] = None,
     states: Optional[dict] = None,
+    page_table: Optional[jax.Array] = None,
     return_hidden: bool = False,
 ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
     """Returns (logits | hidden, new_states, aux_loss).
 
     Train / prefill: states=None / states=fresh; decode: S == 1 with states.
+    ``page_table`` (B, M) routes attention-cache reads/writes through the
+    paged pool (states from ``init_paged_decode_state``).
     """
     B, S = tokens.shape
     if positions is None:
@@ -320,7 +473,8 @@ def forward(
     h = _embed(params, cfg, tokens)
     h, new_states, aux = _run_stack(
         params["layers"], params["tail"], cfg.pattern, h, positions, cfg,
-        policy, memory=memory, states=states, causal=True)
+        policy, memory=memory, states=states, causal=True,
+        page_table=page_table)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
 
     if states is not None and new_states is not None:

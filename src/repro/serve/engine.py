@@ -24,6 +24,7 @@ benchmark baseline (``benchmarks/serve_continuous.py``).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 import itertools
 import threading
@@ -41,10 +42,14 @@ from repro.config.run import ServeConfig
 from repro.core.endpoint import ShardedStore
 from repro.core.executor import BackgroundExecutor
 from repro.models.transformer import (
-    ExecPolicy, init_decode_state, insert_decode_slot)
+    ExecPolicy, init_decode_state, init_paged_decode_state,
+    insert_decode_slot, read_page, scatter_solo_pages, supports_paging,
+    write_page)
+from repro.serve.kvpool import SCRATCH_PAGE, ColdTier, KVBlockPool, chain_keys
 from repro.serve.sampler import SamplingParams, sample, sample_slots
 from repro.train.steps import (
-    make_bucket_prefill_step, make_decode_step, make_prefill_step)
+    make_bucket_prefill_step, make_decode_step, make_paged_decode_step,
+    make_paged_prefill_step, make_prefill_step)
 
 
 class QueueFull(RuntimeError):
@@ -63,6 +68,8 @@ class Request:
     finished_at: float = 0.0
     slot: int = -1
     output: List[int] = dataclasses.field(default_factory=list)
+    pages: List[int] = dataclasses.field(default_factory=list)  # paged engine
+    prefix_hit_tokens: int = 0
 
     @property
     def done(self) -> bool:
@@ -97,6 +104,9 @@ class SlotTable:
         self._req[slot] = None
         heapq.heappush(self._free, slot)
 
+    def get(self, slot: int) -> Optional[Request]:
+        return self._req[slot]
+
     def active(self) -> List[Request]:
         return [r for r in self._req if r is not None]
 
@@ -126,6 +136,7 @@ class Scheduler:
         self.max_queue = scfg.max_queue
         self.buckets = tuple(sorted(scfg.prefill_buckets))
         self.exact = exact_buckets
+        self.capacity = scfg.max_seq_len
         self._dq: "deque[Request]" = deque()
 
     def push(self, req: Request) -> None:
@@ -133,6 +144,12 @@ class Scheduler:
             raise QueueFull(
                 f"admission queue full ({self.max_queue}); retry after step()")
         self._dq.append(req)
+
+    def push_front(self, req: Request) -> None:
+        """Requeue at the head (admission deferred on resource shortage);
+        deliberately exempt from the max_queue bound — the request was
+        already admitted to the queue once."""
+        self._dq.appendleft(req)
 
     def pop(self) -> Request:
         return self._dq.popleft()
@@ -144,12 +161,19 @@ class Scheduler:
         return not self._dq
 
     def bucket_for(self, length: int) -> int:
-        if self.exact:
-            return length
-        for b in self.buckets:
-            if b >= length:
-                return b
-        return length
+        """Bucketed prefill length, clamped to the decode-state capacity.
+
+        The clamp lives here (not at call sites) so *every* caller gets
+        buckets that cannot ring-wrap the prefill: a bucket larger than
+        capacity would silently drop the head of the prompt's cache.
+        """
+        b = length
+        if not self.exact:
+            for cand in self.buckets:
+                if cand >= length:
+                    b = cand
+                    break
+        return max(min(b, self.capacity), length, 1)
 
 
 def _make_admit_program(cfg: ModelConfig, policy: ExecPolicy, capacity: int):
@@ -195,6 +219,50 @@ def _make_decode_program(cfg: ModelConfig, policy: ExecPolicy):
     return step
 
 
+def _make_paged_admit_program(cfg: ModelConfig, policy: ExecPolicy,
+                              capacity: int):
+    """Paged admission, one fused dispatch: gather the reused prefix pages
+    into a solo dense cache, prefill only the suffix bucket, sample the first
+    token, scatter the new pages into the pool, update the slot mirrors.
+    Prefix-hit pages are mapped to the scratch page in ``assign`` so shared
+    (copy-on-write) pages are never rewritten."""
+    prefill = make_paged_prefill_step(cfg, capacity, policy)
+
+    def admit(params, pstate, batch, key, mirrors):
+        solo, last_logits = prefill(params, pstate, batch)
+        tok, key = sample_slots(last_logits, key, batch["temp"][None],
+                                batch["top_k"][None], batch["top_p"][None])
+        pstate = scatter_solo_pages(pstate, solo, batch["assign"])
+        slot = batch["slot"]
+        mirrors = {
+            "tok": mirrors["tok"].at[slot].set(tok[0]),
+            "pos": mirrors["pos"].at[slot].set(batch["length"]),
+            "temp": mirrors["temp"].at[slot].set(batch["temp"]),
+            "top_k": mirrors["top_k"].at[slot].set(batch["top_k"]),
+            "top_p": mirrors["top_p"].at[slot].set(batch["top_p"]),
+        }
+        return pstate, tok, key, mirrors
+    return admit
+
+
+def _make_paged_decode_program(cfg: ModelConfig, policy: ExecPolicy):
+    """Batched decode through the block table: K/V reads and the new token's
+    write are routed to physical pool pages.  The table rides host->device
+    each step (a few KB — the admission plane owns the page map, the fast
+    path just consumes it)."""
+    decode = make_paged_decode_step(cfg, policy)
+
+    def step(params, pstate, key, mirrors, table):
+        batch = {"tokens": mirrors["tok"][:, None],
+                 "positions": mirrors["pos"][:, None]}
+        pstate, logits = decode(params, pstate, batch, table)
+        toks, key = sample_slots(logits, key, mirrors["temp"],
+                                 mirrors["top_k"], mirrors["top_p"])
+        mirrors = dict(mirrors, tok=toks, pos=mirrors["pos"] + 1)
+        return pstate, toks, key, mirrors
+    return step
+
+
 class ContinuousEngine:
     """Continuous-batching engine; see module docstring for the G2/G3 split."""
 
@@ -205,18 +273,9 @@ class ContinuousEngine:
         self.cfg, self.scfg = cfg, scfg
         self.params = params
         self.policy = policy
-        # Fast path: two fixed-shape fused programs (admit retraces once per
-        # bucket length; decode is a single trace).  Donations keep the batch
-        # state and per-slot mirrors updated in place.
-        self._admit_prog = jax.jit(
-            _make_admit_program(cfg, policy, scfg.max_seq_len),
-            donate_argnums=(1, 5))
-        self._decode_prog = jax.jit(_make_decode_program(cfg, policy),
-                                    donate_argnums=(1, 3))
         self._key = jax.random.PRNGKey(scfg.seed)
 
         B = scfg.max_batch
-        self.states = init_decode_state(cfg, B, capacity=scfg.max_seq_len)
         self.slots = SlotTable(B)
         self.scheduler = Scheduler(scfg, exact_buckets=needs_exact_prefill(cfg))
         # Per-slot mirrors live on device (see _make_decode_program); the
@@ -230,6 +289,7 @@ class ContinuousEngine:
         }
         self._eos = np.full(B, -1, np.int32)
         self._host_temps = np.zeros(B, np.float32)
+        self._build_device_plane()
 
         # Sidecar plane (G2) + sharded result store (G3).
         self._own_executor = executor is None
@@ -243,12 +303,29 @@ class ContinuousEngine:
         self._shard_balance = self.store.balance()
         self.records: List[Dict[str, Any]] = []
         self.stats_log: List[Dict[str, Any]] = []
-        self._records_lock = threading.Lock()
+        # One lock covers everything mutated by the engine loop and read from
+        # other threads (records, stats_log, step/token counters): stats()
+        # and result() may legally race the loop thread.
+        self._lock = threading.Lock()
 
         self._rid = itertools.count()
         self._requests: Dict[int, Request] = {}
         self._steps = 0
         self._tokens_out = 0
+
+    def _build_device_plane(self) -> None:
+        """Fast path: two fixed-shape fused programs (admit retraces once per
+        bucket length; decode is a single trace).  Donations keep the batch
+        state and per-slot mirrors updated in place.  ``PagedEngine``
+        overrides this with block-table programs over a shared page pool."""
+        cfg, scfg = self.cfg, self.scfg
+        self._admit_prog = jax.jit(
+            _make_admit_program(cfg, self.policy, scfg.max_seq_len),
+            donate_argnums=(1, 5))
+        self._decode_prog = jax.jit(_make_decode_program(cfg, self.policy),
+                                    donate_argnums=(1, 3))
+        self.states = init_decode_state(cfg, scfg.max_batch,
+                                        capacity=scfg.max_seq_len)
 
     # -- request lifecycle ----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
@@ -257,12 +334,15 @@ class ContinuousEngine:
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim != 1 or prompt.size == 0:
             raise ValueError("prompt must be a non-empty 1-D token array")
+        # Validate the budget *before* using it in the length arithmetic:
+        # an invalid budget must get the budget error, not a misleading
+        # max_seq_len complaint (or none at all, for large negatives).
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
         if len(prompt) + max_new_tokens > self.scfg.max_seq_len:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds max_seq_len ({self.scfg.max_seq_len})")
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
         req = Request(next(self._rid), prompt, max_new_tokens,
                       sampling or SamplingParams.from_config(self.scfg),
                       frontend_embeds=frontend_embeds)
@@ -276,29 +356,12 @@ class ContinuousEngine:
         admitted = 0
         while self.slots.free_count() and not self.scheduler.empty():
             req = self.scheduler.pop()
-            L = len(req.prompt)
-            # Clamp the bucket to the decode-state capacity: a bucket larger
-            # than capacity would ring-wrap the prefill and silently drop the
-            # head of the prompt's cache (submit() guarantees L fits).
-            S = max(min(self.scheduler.bucket_for(L), self.scfg.max_seq_len),
-                    L, 1)
-            toks = np.zeros((1, S), np.int32)
-            toks[0, :L] = req.prompt
-            positions = np.arange(S, dtype=np.int32)[None, :]
+            tok0 = self._admit_one(req)
+            if tok0 is None:            # resource shortage (paged engine):
+                self.scheduler.push_front(req)   # retry after evictions free
+                break                            # pages on later steps
             sp = req.sampling
-            batch = {"tokens": jnp.asarray(toks),
-                     "positions": jnp.asarray(positions),
-                     "length": jnp.asarray(L, jnp.int32),
-                     "temp": jnp.asarray(sp.temperature, jnp.float32),
-                     "top_k": jnp.asarray(sp.top_k, jnp.int32),
-                     "top_p": jnp.asarray(sp.top_p, jnp.float32)}
-            if req.frontend_embeds is not None:
-                batch["frontend_embeds"] = jnp.asarray(req.frontend_embeds)
-            slot = self.slots.acquire(req)
-            self.states, tok, self._key, self._mirrors = self._admit_prog(
-                self.params, self.states, batch,
-                jnp.asarray(slot, jnp.int32), self._key, self._mirrors)
-            tok0 = int(tok[0])
+            slot = req.slot
             req.first_token_at = time.time()
             req.output.append(tok0)
             admitted += 1
@@ -310,6 +373,31 @@ class ContinuousEngine:
                 self._finish(req)
         return admitted
 
+    def _admit_one(self, req: Request) -> Optional[int]:
+        """Acquire a slot and run the fused admit program for one request.
+        Returns the first sampled token, or None if admission must wait."""
+        L = len(req.prompt)
+        # bucket_for clamps to capacity: an over-capacity bucket would
+        # ring-wrap the prefill and drop the head of the prompt's cache.
+        S = self.scheduler.bucket_for(L)
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :L] = req.prompt
+        positions = np.arange(S, dtype=np.int32)[None, :]
+        sp = req.sampling
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(positions),
+                 "length": jnp.asarray(L, jnp.int32),
+                 "temp": jnp.asarray(sp.temperature, jnp.float32),
+                 "top_k": jnp.asarray(sp.top_k, jnp.int32),
+                 "top_p": jnp.asarray(sp.top_p, jnp.float32)}
+        if req.frontend_embeds is not None:
+            batch["frontend_embeds"] = jnp.asarray(req.frontend_embeds)
+        slot = self.slots.acquire(req)
+        self.states, tok, self._key, self._mirrors = self._admit_prog(
+            self.params, self.states, batch,
+            jnp.asarray(slot, jnp.int32), self._key, self._mirrors)
+        return int(tok[0])
+
     def _release_slot(self, slot: int) -> None:
         self.slots.release(slot)
         # Zero the freed slot's device temperature so an all-greedy batch
@@ -320,29 +408,39 @@ class ContinuousEngine:
             self._mirrors = dict(self._mirrors,
                                  temp=jnp.asarray(self._host_temps))
 
+    def _decode_device(self) -> np.ndarray:
+        """Run the fused decode program; returns the (B,) sampled tokens."""
+        self.states, toks_dev, self._key, self._mirrors = self._decode_prog(
+            self.params, self.states, self._key, self._mirrors)
+        return np.asarray(toks_dev)
+
     def _decode_once(self) -> bool:
         """One batched decode step over all slots + per-slot evictions."""
         active = self.slots.active()
         if not active:
             return False
-        self.states, toks_dev, self._key, self._mirrors = self._decode_prog(
-            self.params, self.states, self._key, self._mirrors)
-        toks = np.asarray(toks_dev)
+        toks = self._decode_device()
         for req in active:
             slot = req.slot
             tok = int(toks[slot])
             req.output.append(tok)
-            self._tokens_out += 1
+            with self._lock:
+                self._tokens_out += 1
             if (self._eos[slot] >= 0 and tok == self._eos[slot]) \
                     or len(req.output) >= req.max_new_tokens:
                 self._release_slot(slot)
                 self._finish(req)
-        self._steps += 1
-        if self.scfg.stats_every and self._steps % self.scfg.stats_every == 0:
+        with self._lock:
+            self._steps += 1
+            steps = self._steps
+        if self.scfg.stats_every and steps % self.scfg.stats_every == 0:
             snap = self.stats()
-            self.executor.submit("serve.stats",
-                                 lambda s=snap: self.stats_log.append(s))
+            self.executor.submit("serve.stats", self._append_stats, snap)
         return True
+
+    def _append_stats(self, snap: Dict[str, Any]) -> None:
+        with self._lock:
+            self.stats_log.append(snap)
 
     def step(self) -> bool:
         """Admit + one decode step.  Returns False once fully idle."""
@@ -355,21 +453,25 @@ class ContinuousEngine:
             pass
 
     def _finish(self, req: Request) -> None:
-        req.finished_at = time.time()
+        done_at = time.time()
         payload = {
             "rid": req.rid,
             "tokens": list(req.output),
             "prompt_len": int(len(req.prompt)),
             "ttft_s": req.first_token_at - req.submitted_at,
-            "e2e_s": req.finished_at - req.submitted_at,
+            "e2e_s": done_at - req.submitted_at,
         }
         # Latency-insensitive bookkeeping rides the sidecar (G2): the store
-        # write + latency record never block the decode loop.
+        # write + latency record never block the decode loop.  Submit BEFORE
+        # marking the request done: a concurrent result(rid, wait=True) that
+        # observes req.done must find the record covered by its drain()
+        # (submitting after would open a done-but-not-yet-recorded window).
         self.executor.submit(f"serve.record/{req.rid}", self._record, payload)
+        req.finished_at = done_at
 
     def _record(self, payload: Dict[str, Any]) -> None:
         self.store.put(f"req/{payload['rid']}", payload)
-        with self._records_lock:
+        with self._lock:
             self.records.append(payload)
 
     # -- results / introspection ----------------------------------------------
@@ -389,14 +491,33 @@ class ContinuousEngine:
         return self._requests[rid]
 
     def stats(self) -> Dict[str, Any]:
+        # Counters are mutated by the engine loop thread; snapshot them under
+        # the lock so a concurrent reader never sees a torn update.
+        with self._lock:
+            steps, tokens = self._steps, self._tokens_out
         return {
-            "steps": self._steps,
-            "tokens_out": self._tokens_out,
+            "steps": steps,
+            "tokens_out": tokens,
             "active": len(self.slots.active()),
             "queued": self.scheduler.depth(),
             "free_slots": self.slots.free_count(),
             "result_shards": self._shard_balance,
         }
+
+    def cache_bytes(self) -> int:
+        """Resident KV-cache bytes (dense per-slot buffers or paged pools) —
+        the benchmark's fixed-memory axis."""
+        total = 0
+
+        def visit(path, leaf):
+            nonlocal total
+            last = path[-1]
+            if (isinstance(last, jax.tree_util.DictKey)
+                    and last.key in ("k", "v", "kp", "vp")):
+                total += leaf.nbytes
+            return leaf
+        jax.tree_util.tree_map_with_path(visit, self.states)
+        return total
 
     def close(self) -> None:
         self.executor.drain()
@@ -427,6 +548,228 @@ class ContinuousEngine:
 
 # The continuous engine is the default serving entry point.
 ServeEngine = ContinuousEngine
+
+
+class PagedEngine(ContinuousEngine):
+    """Continuous batching over a paged, tiered KV-cache.
+
+    The dense engine allocates ``max_batch x max_seq_len`` cache rows up
+    front — worst-case memory per slot, no sharing, nothing ever cools.
+    This engine replaces that with the paper's endpoint-expansion plane:
+
+      * **Pages** — each attention layer holds one physical page pool
+        (``init_paged_decode_state``); a host-side block table maps each
+        slot's logical pages to pool pages, so resident memory follows the
+        *live token count*, not ``slots x max_seq_len``.
+      * **Prefix reuse (CoW)** — full prompt pages are indexed by rolling
+        content hash (``serve.kvpool``); a request whose prompt shares a
+        prefix refs the same physical pages and prefills only its suffix.
+        Shared pages are read-only by construction (decode appends into
+        privately-owned pages), so copy-on-write never actually copies.
+      * **Tiered memory** — pages of reusable prefixes that lose the LRU
+        race under pool pressure are spilled to a host-endpoint ``ColdTier``
+        through the ``BackgroundExecutor`` sidecar (advice #2: management
+        off the critical path) and faulted back on the next prefix hit
+        (advice #3: the DPU/host as a second memory endpoint).
+
+    Global-attention decoder-only archs only; recurrent/SWA archs keep the
+    dense exact-prefill engine (``supports_paging``).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 policy: ExecPolicy = ExecPolicy(),
+                 executor: Optional[BackgroundExecutor] = None,
+                 result_endpoints: Optional[Sequence[Any]] = None):
+        if not supports_paging(cfg):
+            raise ValueError(
+                f"{cfg.arch_id}: PagedEngine needs an all-global-attention "
+                "decoder-only arch; use ContinuousEngine")
+        if scfg.max_seq_len % scfg.page_size:
+            raise ValueError(f"max_seq_len ({scfg.max_seq_len}) must be a "
+                             f"multiple of page_size ({scfg.page_size})")
+        self.page_size = scfg.page_size
+        self.pages_per_seq = scfg.max_seq_len // scfg.page_size
+        num_pages = scfg.num_pages or (scfg.max_batch * self.pages_per_seq + 1)
+        if num_pages < self.pages_per_seq + 1:
+            raise ValueError(
+                f"num_pages ({num_pages}) must cover one full sequence "
+                f"({self.pages_per_seq}) plus the scratch page")
+        self.pool = KVBlockPool(num_pages, scfg.page_size,
+                                prefix_cache=scfg.prefix_cache)
+        self.cold = ColdTier(scfg.cold_pages) if scfg.cold_pages > 0 else None
+        self._table = np.full((scfg.max_batch, self.pages_per_seq),
+                              SCRATCH_PAGE, np.int32)
+        self._prompt_tokens = 0
+        self._hit_tokens = 0
+        super().__init__(cfg, params, scfg, policy, executor,
+                         result_endpoints)
+
+    def _build_device_plane(self) -> None:
+        cfg, scfg = self.cfg, self.scfg
+        self._admit_prog = jax.jit(
+            _make_paged_admit_program(cfg, self.policy, scfg.max_seq_len),
+            donate_argnums=(1, 4))
+        self._decode_prog = jax.jit(
+            _make_paged_decode_program(cfg, self.policy),
+            donate_argnums=(1, 3))
+        # Page movers for the tiered plane: slice a page out for spilling
+        # (fresh buffers, safe to stage on the sidecar) / write a faulted
+        # page back in place.
+        self._read_page_prog = jax.jit(read_page)
+        self._write_page_prog = jax.jit(write_page, donate_argnums=(0,))
+        self.states = init_paged_decode_state(cfg, self.pool.num_pages,
+                                              self.page_size)
+
+    # -- tiered-memory plane ---------------------------------------------------
+    def _spill(self, page: int, chain: bytes) -> None:
+        """Evict a cached prefix page: slice its K/V out of every pool into
+        the cold tier, then let the sidecar stage the slices to host memory
+        (``ColdTier.replace``).  The slice is enqueued on the device stream
+        *before* any later program can reuse the page, so the handoff is
+        race-free; the decode loop never blocks on the device->host copy
+        (advice #2), and a failed/dropped staging task just leaves the
+        device slices in place — never a dangling entry."""
+        if self.cold is None:
+            return
+        blob = self._read_page_prog(self.states, jnp.asarray(page, jnp.int32))
+        self.cold.put(chain, blob)
+        leaves, treedef = jax.tree.flatten(blob)
+        self.executor.submit(
+            f"kv.spill/{chain.hex()[:8]}",
+            functools.partial(self._cold_stage, chain, treedef), *leaves)
+
+    def _cold_stage(self, chain: bytes, treedef, *host_leaves) -> None:
+        # Runs on the sidecar after jax.device_get of every leaf: the cold
+        # entry becomes true host-endpoint memory.
+        self.cold.replace(chain, jax.tree.unflatten(treedef, list(host_leaves)))
+
+    def _fault_in(self, chain: bytes) -> Optional[int]:
+        """Bring a cold prefix page back into the pool.  Returns the hot
+        page (ref'd for the caller) or None on a miss / full pool."""
+        if self.cold is None or not self.cold.contains(chain):
+            return None
+        blob = self.cold.take(chain)
+        if blob is None:
+            return None
+        got = self.pool.alloc(1, evict_cb=self._spill)
+        if got is None:
+            self.cold.put(chain, blob)          # no room: stay cold
+            return None
+        page = got[0]
+        self.states = self._write_page_prog(
+            self.states, jnp.asarray(page, jnp.int32), blob)
+        self.pool.register(chain, page)
+        self.pool.faults += 1
+        return page
+
+    # -- admission -------------------------------------------------------------
+    def _match_prefix(self, req: Request,
+                      chains: List[bytes]) -> List[int]:
+        """Longest chain of *full* prompt pages already resident (hot hit)
+        or spilled (cold fault-in).  Always leaves >= 1 token to prefill so
+        the admit program has a real last-token logit to sample from."""
+        pg = self.page_size
+        limit = (len(req.prompt) - 1) // pg
+        pages: List[int] = []
+        for chain in chains[:limit]:
+            page = self.pool.lookup(chain)
+            if page is not None:
+                self.pool.ref(page)
+                pages.append(page)
+                continue
+            page = self._fault_in(chain)        # alloc() already ref'd it
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def _register_prefix(self, req: Request, chains: List[bytes],
+                         pages: List[int], n_hit: int) -> None:
+        """Index the freshly-prefilled full prompt pages for future sharing."""
+        for i in range(n_hit, len(req.prompt) // self.page_size):
+            self.pool.register(chains[i], pages[i])
+
+    def _admit_one(self, req: Request) -> Optional[int]:
+        pg, M = self.page_size, self.pages_per_seq
+        L = len(req.prompt)
+        need = -(-(L + req.max_new_tokens) // pg)
+        chains = (chain_keys(req.prompt, pg) if self.scfg.prefix_cache
+                  else [])
+        hit_pages = self._match_prefix(req, chains)
+        n_hit = len(hit_pages)
+        new_pages = self.pool.alloc(need - n_hit, evict_cb=self._spill)
+        if new_pages is None:                   # pool exhausted by live slots:
+            for p in hit_pages:                 # defer; decode will free pages
+                self.pool.unref(p)
+            return None
+        pages = hit_pages + new_pages
+        req.pages = pages
+        hit_len = n_hit * pg
+        req.prefix_hit_tokens = hit_len
+        with self._lock:
+            self._prompt_tokens += L
+            self._hit_tokens += hit_len
+
+        slot = self.slots.acquire(req)
+        row = np.full(M, SCRATCH_PAGE, np.int32)
+        row[:len(pages)] = pages
+        self._table[slot] = row
+        # Hit pages scatter to the scratch page (never rewrite shared pages).
+        assign = np.full(M, SCRATCH_PAGE, np.int32)
+        assign[n_hit:len(pages)] = pages[n_hit:]
+
+        suffix = req.prompt[hit_len:]
+        # Clamp the suffix bucket so hit_len + S never wraps the solo cache.
+        S = max(min(self.scheduler.bucket_for(len(suffix)),
+                    self.scfg.max_seq_len - hit_len), len(suffix), 1)
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :len(suffix)] = suffix
+        positions = (hit_len + np.arange(S, dtype=np.int32))[None, :]
+        sp = req.sampling
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(positions),
+                 "length": jnp.asarray(L, jnp.int32),
+                 "hit_len": jnp.asarray(hit_len, jnp.int32),
+                 "table": jnp.asarray(row),
+                 "assign": jnp.asarray(assign),
+                 "slot": jnp.asarray(slot, jnp.int32),
+                 "temp": jnp.asarray(sp.temperature, jnp.float32),
+                 "top_k": jnp.asarray(sp.top_k, jnp.int32),
+                 "top_p": jnp.asarray(sp.top_p, jnp.float32)}
+        self.states, tok, self._key, self._mirrors = self._admit_prog(
+            self.params, self.states, batch, self._key, self._mirrors)
+        if self.scfg.prefix_cache:
+            self._register_prefix(req, chains, pages, n_hit)
+        return int(tok[0])
+
+    # -- decode / release ------------------------------------------------------
+    def _decode_device(self) -> np.ndarray:
+        self.states, toks_dev, self._key, self._mirrors = self._decode_prog(
+            self.params, self.states, self._key, self._mirrors,
+            jnp.asarray(self._table))
+        return np.asarray(toks_dev)
+
+    def _release_slot(self, slot: int) -> None:
+        req = self.slots.get(slot)
+        if req is not None:
+            for p in req.pages:
+                self.pool.unref(p)      # shared pages stay; private ones free
+            req.pages = []
+        # Point the retired row at the scratch page: its mirrors keep
+        # advancing through the fixed-shape decode, and those garbage writes
+        # must never land in a page that gets reallocated.
+        self._table[slot] = SCRATCH_PAGE
+        super()._release_slot(slot)
+
+    def stats(self) -> Dict[str, Any]:
+        s = super().stats()
+        with self._lock:
+            hit, prompt = self._hit_tokens, self._prompt_tokens
+        s["kv_pool"] = self.pool.stats()
+        s["cold_pages"] = len(self.cold) if self.cold is not None else 0
+        s["resident_cache_bytes"] = self.cache_bytes()
+        s["prefix_hit_rate"] = hit / prompt if prompt else 0.0
+        return s
 
 
 class FixedBatchEngine:

@@ -1,0 +1,232 @@
+"""Paged KV-cache bookkeeping: block allocator, prefix index, cold tier.
+
+The paper's advice #3 treats the SmartNIC as a *new endpoint* that expands
+host memory; advice #2 keeps latency-insensitive management off the critical
+path.  This module is the host half of that design for serving:
+
+  * ``KVBlockPool`` — fixed-size physical pages over the device-resident KV
+    pool, refcounted so requests sharing a prompt prefix map the *same*
+    physical pages.  Sharing is copy-on-write at page granularity: only
+    *full* prompt pages enter the prefix index, and decode always appends
+    into pages the slot owns exclusively, so a shared page is read-only by
+    construction and the "copy" is just allocating a private page at the
+    first write past the shared boundary.
+  * ``chain_keys`` — rolling content hash per page (each key commits to the
+    whole token prefix, not just its own chunk), the hash-keyed prefix index
+    the tentpole asks for.
+  * ``ColdTier`` — the host-endpoint tier: evicted pages' K/V content lives
+    here as numpy blobs keyed by chain hash, spilled asynchronously through
+    ``core.executor.BackgroundExecutor`` and faulted back on a prefix hit.
+
+Physical page 0 is reserved as a scratch page: device programs point every
+unused/retired block-table entry at it, so released decode rows and padded
+logical pages scatter harmlessly instead of corrupting live pages.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+SCRATCH_PAGE = 0
+
+
+def chain_keys(tokens: np.ndarray, page_size: int) -> List[bytes]:
+    """Rolling hash per *full* page of ``tokens``.
+
+    ``key[i]`` commits to tokens ``[0, (i+1)*page_size)``, so equal keys imply
+    equal prefixes — a lookup never needs to re-verify token content.
+    """
+    tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    out: List[bytes] = []
+    h = b""
+    for i in range(len(tokens) // page_size):
+        chunk = tokens[i * page_size:(i + 1) * page_size]
+        h = hashlib.blake2b(h + chunk.tobytes(), digest_size=16).digest()
+        out.append(h)
+    return out
+
+
+class KVBlockPool:
+    """Refcounted page allocator with a hash-keyed prefix index.
+
+    States of a physical page:
+      * **free** — on the free stack, content meaningless.
+      * **active** — refcount > 0; owned by one slot, or shared read-only by
+        several slots through the prefix index (full prompt pages only).
+      * **cached** — refcount == 0 but still indexed by its chain key: a
+        reusable prefix kept warm until pool pressure evicts it (LRU) to the
+        cold tier.
+    """
+
+    def __init__(self, num_pages: int, page_size: int,
+                 prefix_cache: bool = True):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the scratch page)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.prefix_cache = prefix_cache
+        # Lowest-numbered free page first: deterministic like SlotTable.
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._refs = np.zeros(num_pages, np.int64)
+        self._chain_of: Dict[int, bytes] = {}        # page -> chain key
+        self._index: Dict[bytes, int] = {}           # chain key -> hot page
+        self._cached: "OrderedDict[int, bytes]" = OrderedDict()  # LRU, ref==0
+        # Stats (host-side; read by engine.stats()).
+        self.hit_pages = 0
+        self.lookup_pages = 0
+        self.faults = 0
+        self.spills = 0
+
+    # -- capacity ------------------------------------------------------------
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def cached_count(self) -> int:
+        return len(self._cached)
+
+    def available(self) -> int:
+        """Pages obtainable right now (free + evictable cached)."""
+        return len(self._free) + len(self._cached)
+
+    def active_count(self) -> int:
+        return int((self._refs > 0).sum())
+
+    # -- alloc / refcounting -------------------------------------------------
+    def alloc(self, n: int,
+              evict_cb: Optional[Callable[[int, bytes], None]] = None
+              ) -> Optional[List[int]]:
+        """Take ``n`` pages, evicting LRU cached prefixes when the free stack
+        runs dry (``evict_cb(page, chain)`` spills content *before* reuse).
+        Returns None — and takes nothing — if the pool cannot satisfy ``n``."""
+        if self.available() < n:
+            return None
+        got: List[int] = []
+        while len(got) < n:
+            if self._free:
+                got.append(self._free.pop())
+                continue
+            evicted = self.evict_one(evict_cb)
+            assert evicted is not None, "available() promised a page"
+        for p in got:
+            self._refs[p] = 1
+        return got
+
+    def ref(self, page: int) -> None:
+        if self._refs[page] == 0:
+            self._cached.pop(page, None)
+        self._refs[page] += 1
+
+    def unref(self, page: int) -> None:
+        assert self._refs[page] > 0, f"page {page} not referenced"
+        self._refs[page] -= 1
+        if self._refs[page] > 0:
+            return
+        chain = self._chain_of.get(page)
+        if chain is not None and self.prefix_cache:
+            self._cached[page] = chain           # keep warm, LRU order
+            self._cached.move_to_end(page)
+        else:
+            self._forget(page)
+            self._free.append(page)
+
+    def _forget(self, page: int) -> None:
+        chain = self._chain_of.pop(page, None)
+        if chain is not None and self._index.get(chain) == page:
+            del self._index[chain]
+
+    # -- prefix index ----------------------------------------------------------
+    def lookup(self, chain: bytes) -> Optional[int]:
+        """Hot hit: returns the page (caller must ref() it) or None."""
+        self.lookup_pages += 1
+        page = self._index.get(chain)
+        if page is None:
+            return None
+        self.hit_pages += 1
+        if page in self._cached:
+            self._cached.move_to_end(page)       # touched: most-recently-used
+        return page
+
+    def register(self, chain: bytes, page: int) -> None:
+        """Index a freshly-computed full prompt page.  First writer wins: if
+        the chain is already indexed (two identical prompts prefilled
+        concurrently), the duplicate page stays private to its slot."""
+        if not self.prefix_cache or chain in self._index:
+            return
+        self._index[chain] = page
+        self._chain_of[page] = chain
+
+    def evict_one(self, evict_cb: Optional[Callable[[int, bytes], None]] = None
+                  ) -> Optional[Tuple[int, bytes]]:
+        """Evict the LRU cached page to the free stack, spilling first."""
+        if not self._cached:
+            return None
+        page, chain = self._cached.popitem(last=False)
+        if evict_cb is not None:
+            evict_cb(page, chain)
+            self.spills += 1
+        self._forget(page)
+        self._free.append(page)
+        return page, chain
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "pages": self.num_pages,
+            "free": self.free_count(),
+            "cached": self.cached_count(),
+            "active": self.active_count(),
+            "prefix_hit_pages": self.hit_pages,
+            "prefix_lookup_pages": self.lookup_pages,
+            "faults": self.faults,
+            "spills": self.spills,
+        }
+
+
+class ColdTier:
+    """Host-endpoint tier for spilled KV pages (paper advice #3).
+
+    The engine inserts a spilled page's blob *synchronously* (cheap device
+    slices), then the sidecar executor stages it to host memory and
+    ``replace``s the entry in place — so a prefix hit racing an in-flight
+    spill always finds the blob, and a failed/dropped staging task degrades
+    to keeping the device slices (never a dangling wait).  Capacity is
+    counted in pages; over capacity the LRU entry is dropped (a lost cold
+    prefix is just a future recompute)."""
+
+    def __init__(self, capacity_pages: int = 256):
+        self.capacity = capacity_pages
+        self._store: "OrderedDict[bytes, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.dropped = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def put(self, chain: bytes, blob: Any) -> None:
+        with self._lock:
+            self._store[chain] = blob
+            self._store.move_to_end(chain)
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+                self.dropped += 1
+
+    def replace(self, chain: bytes, blob: Any) -> None:
+        """Swap an entry's payload (device slices -> host-staged numpy)
+        without bumping LRU order; a no-op if the entry was dropped or
+        faulted back meanwhile."""
+        with self._lock:
+            if chain in self._store:
+                self._store[chain] = blob
+
+    def take(self, chain: bytes) -> Optional[Any]:
+        """Pop a blob (it is moving back to the hot tier); None on miss."""
+        with self._lock:
+            return self._store.pop(chain, None)
+
+    def contains(self, chain: bytes) -> bool:
+        with self._lock:
+            return chain in self._store

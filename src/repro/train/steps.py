@@ -16,7 +16,7 @@ from repro.config.model import ModelConfig
 from repro.config.run import TrainConfig
 from repro.models.transformer import (
     ExecPolicy, forward, init_decode_state, init_params,
-    invalidate_positions_from)
+    invalidate_positions_from, load_prefix_pages)
 from repro.train import compression as comp
 from repro.train import optimizer as opt
 from repro.train.losses import chunked_xent
@@ -174,5 +174,45 @@ def make_decode_step(cfg: ModelConfig, policy: ExecPolicy = ExecPolicy()):
         logits, new_states, _ = forward(
             params, cfg, batch["tokens"], batch.get("positions"),
             policy=policy, states=states)
+        return new_states, logits[:, -1]
+    return decode_step
+
+
+def make_paged_prefill_step(cfg: ModelConfig, capacity: int,
+                            policy: ExecPolicy = ExecPolicy()):
+    """Continuation prefill against the paged pool (PagedEngine admission).
+
+    The reused prefix is *not* recomputed: its pages are gathered from the
+    pool into a fresh batch-1 dense cache (``load_prefix_pages``), and only
+    the suffix bucket is prefilled, at positions offset by ``hit_len``.
+    Returns (solo dense state, logits at the last real token); the caller
+    scatters the solo cache back into pool pages.  One trace per suffix
+    bucket length — ``hit_len``/``length``/``table`` are traced scalars.
+    """
+    def prefill_step(params, pstate, batch):
+        # batch: tokens (1, S) right-padded suffix bucket, positions (1, S) =
+        # hit_len + arange(S), length () total true L, hit_len (), table (M,)
+        hit_len = batch["hit_len"]
+        solo = init_decode_state(cfg, 1, capacity)
+        solo = load_prefix_pages(solo, pstate, batch["table"], hit_len)
+        logits, new_solo, _ = forward(
+            params, cfg, batch["tokens"], batch["positions"],
+            policy=policy, states=solo)
+        length = batch["length"]
+        new_solo = invalidate_positions_from(new_solo, length)
+        new_solo["pos"] = length.astype(jnp.int32)
+        last = jax.lax.dynamic_slice_in_dim(
+            logits, length - hit_len - 1, 1, axis=1)
+        return new_solo, last[:, 0]
+    return prefill_step
+
+
+def make_paged_decode_step(cfg: ModelConfig,
+                           policy: ExecPolicy = ExecPolicy()):
+    """Batched decode reading/writing K/V through the block table."""
+    def decode_step(params, pstate, batch, table):
+        logits, new_states, _ = forward(
+            params, cfg, batch["tokens"], batch.get("positions"),
+            policy=policy, states=pstate, page_table=table)
         return new_states, logits[:, -1]
     return decode_step

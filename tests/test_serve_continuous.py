@@ -1,5 +1,7 @@
 """Continuous-batching engine: admission/eviction ordering, mid-stream join
 exactness, sharded result retrieval, per-slot sampling.  Tier-1."""
+import threading
+
 import numpy as np
 import pytest
 
@@ -8,7 +10,8 @@ import jax
 from repro.config import ServeConfig, TrainConfig, get_config
 from repro.core.endpoint import ShardedStore
 from repro.serve.engine import (
-    ContinuousEngine, QueueFull, Request, SlotTable, needs_exact_prefill)
+    ContinuousEngine, QueueFull, Request, Scheduler, SlotTable,
+    needs_exact_prefill)
 from repro.serve.sampler import SamplingParams
 from repro.train.steps import init_train_state
 
@@ -68,6 +71,53 @@ def test_admission_order_and_slot_recycling(tiny_engine_parts):
     assert all(eng.request(r).done for r in (r0, r1, r2))
     assert [len(eng.request(r).output) for r in (r0, r1, r2)] == [2, 8, 2]
     eng.close()
+
+
+def test_submit_validates_budget_before_length_arithmetic(tiny_engine_parts):
+    """An invalid token budget must raise the budget error even when the
+    budget also breaks the length check (regression: the arithmetic check
+    ran first and masked it — or, for large negatives, passed silently)."""
+    cfg, params = tiny_engine_parts
+    eng = _engine(cfg, params)
+    rng = np.random.default_rng(8)
+    p = _prompt(rng, cfg, 8)
+    with pytest.raises(ValueError, match="max_new_tokens must be >= 1"):
+        eng.submit(p, 0)
+    with pytest.raises(ValueError, match="max_new_tokens must be >= 1"):
+        eng.submit(_prompt(rng, cfg, 95), 0)     # also fails length check
+    with pytest.raises(ValueError, match="max_new_tokens must be >= 1"):
+        eng.submit(p, -1000)                     # would pass length check
+    with pytest.raises(ValueError, match="exceeds max_seq_len"):
+        eng.submit(p, 96)
+    eng.close()
+
+
+def test_submit_validates_prompt_shape(tiny_engine_parts):
+    cfg, params = tiny_engine_parts
+    eng = _engine(cfg, params)
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(np.zeros((2, 4), np.int32), 4)
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(np.zeros(0, np.int32), 4)
+    # exact-fit budget is legal
+    rid = eng.submit(np.zeros(92, np.int32), 4)
+    eng.run()
+    assert len(eng.request(rid).output) == 4
+    eng.close()
+
+
+def test_scheduler_bucket_for_clamps_to_capacity():
+    """bucket_for owns the capacity clamp, so every caller gets buckets
+    that cannot ring-wrap the prefill (regression: the clamp lived at one
+    call site in _admit)."""
+    scfg = ServeConfig(max_seq_len=96, prefill_buckets=(16, 128))
+    sched = Scheduler(scfg)
+    assert sched.bucket_for(8) == 16
+    assert sched.bucket_for(70) == 96            # bucket 128 > capacity
+    assert sched.bucket_for(96) == 96
+    exact = Scheduler(scfg, exact_buckets=True)
+    assert exact.bucket_for(70) == 70
+    assert exact.bucket_for(0) == 1              # floor
 
 
 def test_bounded_queue_backpressure(tiny_engine_parts):
@@ -192,6 +242,45 @@ def test_heterogeneous_sampling_and_eos(tiny_engine_parts):
 # ----------------------------------------------------------------------------
 # sharded result store (G3) + sidecar bookkeeping (G2)
 # ----------------------------------------------------------------------------
+
+def test_stats_and_results_race_free_with_engine_loop(tiny_engine_parts):
+    """stats()/result() may be called from other threads while the engine
+    loop runs: counter snapshots and record appends are lock-guarded, so a
+    concurrent reader never tears a read or crashes (regression: unsynced
+    reads of _steps/_tokens_out/records mutated by the loop thread)."""
+    cfg, params = tiny_engine_parts
+    eng = _engine(cfg, params, stats_every=1)
+    rng = np.random.default_rng(9)
+    rids = [eng.submit(_prompt(rng, cfg, 6 + i % 4), 12) for i in range(8)]
+    errors = []
+    stop = threading.Event()
+
+    def reader():
+        try:
+            while not stop.is_set():
+                s = eng.stats()
+                assert s["tokens_out"] >= 0 and s["steps"] >= 0
+                for rid in rids:
+                    req = eng._requests.get(rid)
+                    if req is not None and req.done:
+                        out = eng.result(rid)     # drains, then fetches
+                        assert out["tokens"] == req.output
+        except Exception as e:  # surfaced after join
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    eng.run()
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors, errors
+    final = eng.stats()
+    assert final["tokens_out"] >= 8              # all requests produced tokens
+    assert len(eng.stats_log) > 0                # sidecar snapshots landed
+    eng.close()
+
 
 def test_results_land_in_sharded_store(tiny_engine_parts):
     cfg, params = tiny_engine_parts
