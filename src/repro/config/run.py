@@ -100,3 +100,13 @@ class ServeConfig:
     prefix_cache: bool = True        # hash-keyed prefix page sharing (CoW)
     cold_pages: int = 256            # host-tier spill capacity (pages);
     #                                  0 disables the tiered-memory plane
+    # Disaggregated prefill/decode serving (DisaggregatedEngine): prefill
+    # runs on a second engine endpoint; KV pages come back as a handoff
+    # blob hash-sharded over peer endpoints.
+    disaggregate: bool = False       # split prefill onto its own endpoint
+    disagg_route: str = "auto"       # "auto" (cost model per request) |
+    #                                  "remote" | "local" (forced)
+    prefill_slots: int = 2           # prefill-endpoint slot count
+    prefill_pages: int = 0           # prefill-endpoint pool pages (0 -> full
+    #                                  residency, like num_pages)
+    handoff_shards: int = 2          # ShardedStore endpoints for handoffs

@@ -56,6 +56,18 @@ class Decision:
     rationale: str
 
 
+def prefill_task(name: str, prompt_tokens: int, flops_per_token: float,
+                 handoff_bytes: float) -> TaskProfile:
+    """One request's prefill as an offloadable unit (disaggregated serving).
+
+    Compute scales with prompt length; the link traffic, if routed to the
+    remote prefill endpoint, is the KV handoff coming *back* (the prompt
+    tokens going out are noise next to the KV pages)."""
+    return TaskProfile(name, flops=prompt_tokens * flops_per_token,
+                       bytes_in=0.0, bytes_out=handoff_bytes,
+                       on_critical_path=True)
+
+
 class CostModel:
     def __init__(self, profile: SidecarProfile,
                  pcie_bw: float = TPU_PCIE_BW, pcie_lat: float = TPU_PCIE_LAT):
@@ -78,6 +90,39 @@ class CostModel:
     def replication_time(self, nbytes: float, n_peers: int) -> float:
         """Sidecar->peer-endpoint fanout (the Redis-replication analog)."""
         return DCN_LAT + n_peers * nbytes / DCN_BW
+
+    def decide_prefill_route(self, t: TaskProfile, active_slots: int,
+                             max_slots: int) -> Decision:
+        """Disaggregated-serving routing (advice #3: the off-path endpoint
+        as an independent *worker*, not a cache).
+
+        Prefilling locally steals decode steps: the fused admit program
+        occupies the device for ``device_time`` seconds during which every
+        active decode slot stalls, so the harm is the device time amplified
+        by decode batch pressure.  Routing to the remote prefill endpoint
+        instead costs the decode side only the handoff link transfer — the
+        remote *compute* overlaps with decoding (it runs on the other
+        endpoint's device).  Remote wins when the amplified stall exceeds
+        the link cost; short prompts lose to the fixed link latency floor
+        and stay local, exactly the G4 shape applied per request."""
+        # Local prefill never ships the handoff: its cost is compute only.
+        # Charging t.bytes_out against the device (device_time does) would
+        # inflate the local estimate with traffic that exists only on the
+        # remote path and systematically over-route remote.
+        dev = t.flops / self.p.accel_flops
+        link = self.link_time(t)
+        pressure = active_slots / max(1, max_slots)
+        stall = dev * max(1.0, active_slots * pressure)
+        if stall > link:
+            return Decision(
+                Placement.SIDECAR_ASYNC, dev, link, link,
+                f"remote prefill: local stall {stall:.2e}s (device "
+                f"{dev:.2e}s x {active_slots} active slots @ pressure "
+                f"{pressure:.2f}) > handoff link {link:.2e}s")
+        return Decision(
+            Placement.DEVICE, dev, link, link,
+            f"local prefill: handoff link {link:.2e}s >= stall "
+            f"{stall:.2e}s (short prompt / idle decode batch)")
 
     # -- the guideline logic ---------------------------------------------------
     def decide(self, t: TaskProfile) -> Decision:

@@ -108,6 +108,44 @@ class PeerEndpoint:
     def exists(self, rel_path: str) -> bool:
         return os.path.exists(os.path.join(self.root, rel_path))
 
+    def delete(self, rel_path: str) -> bool:
+        path = os.path.join(self.root, rel_path)
+        try:
+            os.remove(path)
+            return True
+        except FileNotFoundError:
+            return False
+
+
+class BlobEndpoint:
+    """Dict-shaped adapter over a ``PeerEndpoint`` so a ``ShardedStore`` can
+    place opaque byte blobs on directory/DCN-backed peers, not just
+    in-process dicts.  Keys map to relative paths on the peer (slashes keep
+    their meaning: ``kv/7`` lands in a ``kv/`` subtree).  Used for the
+    prefill->decode KV handoffs in disaggregated serving — the store's hash
+    sharding spreads requests across peer endpoints."""
+
+    def __init__(self, peer: PeerEndpoint):
+        self.peer = peer
+
+    def __setitem__(self, key: str, value: bytes) -> None:
+        self.peer.write(key, value)
+
+    def __getitem__(self, key: str) -> bytes:
+        if not self.peer.exists(key):
+            raise KeyError(key)
+        return self.peer.read(key)
+
+    def __contains__(self, key: str) -> bool:
+        return self.peer.exists(key)
+
+    def pop(self, key: str, default: Any = None) -> Any:
+        if not self.peer.exists(key):
+            return default
+        data = self.peer.read(key)
+        self.peer.delete(key)
+        return data
+
 
 class EndpointRegistry:
     def __init__(self):
@@ -165,6 +203,14 @@ class ShardedStore:
 
     def get(self, key: str) -> Any:
         return self.endpoints[self.owner(key)][key]
+
+    def contains(self, key: str) -> bool:
+        return key in self.endpoints[self.owner(key)]
+
+    def pop(self, key: str, default: Any = None) -> Any:
+        """Consume a key (one-shot payloads like KV handoffs).  Works over
+        both dict endpoints and ``BlobEndpoint`` peers."""
+        return self.endpoints[self.owner(key)].pop(key, default)
 
     def balance(self) -> List[int]:
         counts = [0] * len(self.endpoints)

@@ -14,7 +14,8 @@ from typing import Dict, List, Optional
 
 from repro.config.run import OffloadConfig
 from repro.core.characterize import SidecarProfile, characterize
-from repro.core.costmodel import CostModel, Decision, Placement, TaskProfile
+from repro.core.costmodel import (
+    CostModel, Decision, Placement, TaskProfile, prefill_task)
 
 
 @dataclasses.dataclass
@@ -95,3 +96,75 @@ class OffloadPlanner:
                       n_replicas: int = 3) -> OffloadPlan:
         return self.plan(training_task_inventory(
             param_bytes, step_period_s, n_replicas))
+
+
+class PrefillRoutePlanner:
+    """Per-request prefill placement for disaggregated serving.
+
+    Every ``route`` call runs one request's prompt through the cost model
+    (``decide_prefill_route``: prompt length vs. handoff link cost, scaled
+    by decode batch pressure) and remembers the decision, so the serving
+    plane's placement rationale stays explainable the same way training
+    offload does — ``plan()`` yields an ``OffloadPlan`` whose ``to_table()``
+    lists every routing call and why it went remote or local."""
+
+    def __init__(self, flops_per_token: float,
+                 profile: Optional[SidecarProfile] = None,
+                 keep_last: int = 256):
+        self.flops_per_token = flops_per_token
+        # Characterization is measured, not free — defer it until a routing
+        # decision actually needs the cost model (forced-route configs never
+        # do).
+        self._profile = profile
+        self._cost_model: Optional[CostModel] = None
+        self.keep_last = keep_last
+        self._decisions: "Dict[str, Decision]" = {}
+        self.remote_count = 0
+        self.local_count = 0
+
+    @property
+    def profile(self) -> SidecarProfile:
+        if self._profile is None:
+            self._profile = characterize(quick=True)
+        return self._profile
+
+    @property
+    def cost_model(self) -> CostModel:
+        if self._cost_model is None:
+            # Price the handoff with the *measured* link, not the datasheet
+            # constants — the link term dominates the routing decision.
+            p = self.profile
+            self._cost_model = CostModel(p, pcie_bw=p.link_bw,
+                                         pcie_lat=p.link_lat)
+        return self._cost_model
+
+    def route(self, rid: int, prompt_tokens: int, handoff_bytes: float,
+              active_slots: int, max_slots: int) -> Decision:
+        t = prefill_task(f"prefill/req{rid}", prompt_tokens,
+                         self.flops_per_token, handoff_bytes)
+        d = self.cost_model.decide_prefill_route(t, active_slots, max_slots)
+        self._note(t.name, d)
+        return d
+
+    def note_forced(self, rid: int, remote: bool, why: str) -> Decision:
+        """Record a config-forced route so ``to_table()`` stays complete."""
+        d = Decision(
+            Placement.SIDECAR_ASYNC if remote else Placement.DEVICE,
+            0.0, 0.0, 0.0, f"forced by config: {why}")
+        self._note(f"prefill/req{rid}", d)
+        return d
+
+    def _note(self, name: str, d: Decision) -> None:
+        if d.placement == Placement.SIDECAR_ASYNC:
+            self.remote_count += 1
+        else:
+            self.local_count += 1
+        self._decisions[name] = d
+        # A long-lived server must not grow this unboundedly; keep the tail.
+        while len(self._decisions) > self.keep_last:
+            self._decisions.pop(next(iter(self._decisions)))
+
+    def plan(self) -> OffloadPlan:
+        # Raw _profile on purpose: rendering the table of forced decisions
+        # must not trigger a characterization run.
+        return OffloadPlan(dict(self._decisions), self._profile)

@@ -16,7 +16,8 @@ import jax
 import numpy as np
 
 from repro.config import ServeConfig, TrainConfig, get_config
-from repro.serve.engine import ContinuousEngine, PagedEngine, QueueFull
+from repro.serve.engine import (
+    ContinuousEngine, DisaggregatedEngine, PagedEngine, QueueFull)
 from repro.serve.sampler import SamplingParams
 from repro.train.steps import init_train_state
 
@@ -38,6 +39,15 @@ def main() -> None:
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV pool pages (0 -> full residency per slot)")
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split serving across a prefill endpoint and a "
+                         "decode endpoint: long prompts prefill remotely "
+                         "and their KV pages arrive as a handoff blob "
+                         "(implies the paged engine)")
+    ap.add_argument("--route", default="auto",
+                    choices=("auto", "remote", "local"),
+                    help="prefill routing: cost model per request (auto) "
+                         "or forced")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -47,8 +57,11 @@ def main() -> None:
     scfg = ServeConfig(max_batch=args.max_batch,
                        temperature=args.temperature, seed=args.seed,
                        page_size=args.page_size, num_pages=args.num_pages,
-                       prefix_cache=not args.no_prefix_cache)
-    engine_cls = PagedEngine if args.paged else ContinuousEngine
+                       prefix_cache=not args.no_prefix_cache,
+                       disaggregate=args.disaggregate,
+                       disagg_route=args.route)
+    engine_cls = (DisaggregatedEngine if args.disaggregate
+                  else PagedEngine if args.paged else ContinuousEngine)
     eng = engine_cls(cfg, state["params"], scfg)
     sampling = SamplingParams.from_config(scfg)
 
@@ -87,6 +100,9 @@ def main() -> None:
         out = eng.result(rid)
         print(f"  req{rid}: prompt={out['prompt_len']} "
               f"tokens={out['tokens'][:10]}{'...' if len(out['tokens']) > 10 else ''}")
+    if args.disaggregate:
+        print("prefill routing (cost-model placements):")
+        print(eng.route_plan().to_table())
     eng.close()
 
 

@@ -30,7 +30,7 @@ import itertools
 import threading
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,13 +39,17 @@ import numpy as np
 from repro.config.model import (
     MIX_ATTN_LOCAL, MIX_RGLRU, MIX_RWKV6, ModelConfig)
 from repro.config.run import ServeConfig
+from repro.core.costmodel import Placement
 from repro.core.endpoint import ShardedStore
 from repro.core.executor import BackgroundExecutor
+from repro.core.planner import PrefillRoutePlanner
 from repro.models.transformer import (
     ExecPolicy, init_decode_state, init_paged_decode_state,
     insert_decode_slot, read_page, scatter_solo_pages, supports_paging,
     write_page)
-from repro.serve.kvpool import SCRATCH_PAGE, ColdTier, KVBlockPool, chain_keys
+from repro.serve.kvpool import (
+    SCRATCH_PAGE, ColdTier, KVBlockPool, KVHandoff, chain_keys, pack_handoff,
+    unpack_handoff)
 from repro.serve.sampler import SamplingParams, sample, sample_slots
 from repro.train.steps import (
     make_bucket_prefill_step, make_decode_step, make_paged_decode_step,
@@ -312,6 +316,16 @@ class ContinuousEngine:
         self._requests: Dict[int, Request] = {}
         self._steps = 0
         self._tokens_out = 0
+        self._closed = False
+        self._loop_error: Optional[BaseException] = None
+        # Serializes the step loop against close()/failure teardown: a
+        # close() racing a mid-flight step must not release slots the loop
+        # is still decoding (RLock: the step exception path re-enters via
+        # _fail_pending).  submit() deliberately does NOT take it — a
+        # producer must never stall behind a device step — so queue
+        # admission vs. teardown atomicity gets its own small lock.
+        self._lifecycle = threading.RLock()
+        self._admission = threading.Lock()
 
     def _build_device_plane(self) -> None:
         """Fast path: two fixed-shape fused programs (admit retraces once per
@@ -346,8 +360,13 @@ class ContinuousEngine:
         req = Request(next(self._rid), prompt, max_new_tokens,
                       sampling or SamplingParams.from_config(self.scfg),
                       frontend_embeds=frontend_embeds)
-        self.scheduler.push(req)          # raises QueueFull at capacity
-        self._requests[req.rid] = req
+        # Atomic against _fail_pending's teardown so a request can never
+        # slip into the queue after close() already failed everything.
+        with self._admission:
+            if self._closed:
+                raise RuntimeError("engine is closed; no new submissions")
+            self.scheduler.push(req)      # raises QueueFull at capacity
+            self._requests[req.rid] = req
         return req.rid
 
     def _admit(self) -> int:
@@ -443,9 +462,23 @@ class ContinuousEngine:
             self.stats_log.append(snap)
 
     def step(self) -> bool:
-        """Admit + one decode step.  Returns False once fully idle."""
-        admitted = self._admit()
-        return self._decode_once() or admitted > 0
+        """Admit + one decode step.  Returns False once fully idle.
+
+        An exception out of the decode loop is terminal for every in-flight
+        request: it is recorded (so ``result()`` surfaces it instead of
+        reporting the request as forever "still decoding") and every
+        pending request gets a terminal error record before re-raising."""
+        with self._lifecycle:
+            if self._closed:
+                return False
+            try:
+                admitted = self._admit()
+                return self._decode_once() or admitted > 0
+            except Exception as e:
+                self._loop_error = e
+                self._fail_pending(
+                    f"decode loop died: {type(e).__name__}: {e}")
+                raise
 
     def run(self) -> None:
         """Drive until queue and slots are empty (the serve loop)."""
@@ -474,14 +507,52 @@ class ContinuousEngine:
         with self._lock:
             self.records.append(payload)
 
+    def _fail_pending(self, reason: str) -> None:
+        """Terminate every unfinished request with an error record.
+
+        Runs on close() and on decode-loop death so a ``result(wait=True)``
+        waiter always finds a terminal record instead of waiting on a
+        request that can no longer finish.  Records are written
+        synchronously — this path is not latency-sensitive and must not
+        depend on the sidecar still being alive.  Holds the admission lock
+        so no submit() can enqueue between the sweep and the queue drain."""
+        with self._admission:
+            pending = [r for r in self._requests.values() if not r.done]
+            for req in pending:
+                if req.slot >= 0 and self.slots.get(req.slot) is req:
+                    self._release_slot(req.slot)
+                done_at = time.time()
+                self._record({
+                    "rid": req.rid,
+                    "tokens": list(req.output),
+                    "prompt_len": int(len(req.prompt)),
+                    "ttft_s": (req.first_token_at - req.submitted_at
+                               if req.first_token_at else 0.0),
+                    "e2e_s": done_at - req.submitted_at,
+                    "error": reason,
+                })
+                req.finished_at = done_at
+            while not self.scheduler.empty():
+                self.scheduler.pop()
+
     # -- results / introspection ----------------------------------------------
     def result(self, rid: int, wait: bool = True) -> Dict[str, Any]:
-        """Fetch a completed generation from the sharded result store."""
+        """Fetch a completed generation from the sharded result store.
+
+        A request the engine can no longer finish is still terminal:
+        ``close()`` and decode-loop death write error records for every
+        pending request, so this returns a payload with an ``"error"`` key
+        instead of hanging the waiter; a decode-loop exception re-raises
+        here with the original as cause."""
         if wait and not self.executor.drain():
             raise TimeoutError(
                 f"sidecar drain timed out before req/{rid} was recorded")
         req = self._requests.get(rid)
         if req is not None and not req.done:
+            if self._loop_error is not None:
+                raise RuntimeError(
+                    f"request {rid} cannot complete: the decode loop died"
+                ) from self._loop_error
             raise RuntimeError(
                 f"request {rid} is still queued/decoding; drive step()/run() "
                 "to completion before fetching its result")
@@ -520,6 +591,14 @@ class ContinuousEngine:
         return total
 
     def close(self) -> None:
+        """Shut down: fail whatever is still pending (queued or mid-decode)
+        with terminal records so concurrent ``result(wait=True)`` callers
+        wake with an error payload instead of hanging, then drain the
+        sidecar."""
+        with self._lifecycle:       # wait out any in-flight step first
+            if not self._closed:
+                self._closed = True
+                self._fail_pending("engine closed before completion")
         self.executor.drain()
         if self._own_executor:
             self.executor.shutdown(drain=False)
@@ -689,12 +768,12 @@ class PagedEngine(ContinuousEngine):
         for i in range(n_hit, len(req.prompt) // self.page_size):
             self.pool.register(chains[i], pages[i])
 
-    def _admit_one(self, req: Request) -> Optional[int]:
-        pg, M = self.page_size, self.pages_per_seq
-        L = len(req.prompt)
-        need = -(-(L + req.max_new_tokens) // pg)
-        chains = (chain_keys(req.prompt, pg) if self.scfg.prefix_cache
-                  else [])
+    def _reserve_pages(self, req: Request, chains: List[bytes],
+                       need: int) -> Optional[Tuple[List[int], int]]:
+        """Shared admission half: prefix-match (hot hit or cold fault-in),
+        allocate the remainder, update hit accounting.  Returns
+        ``(pages, n_hit)``, or None when admission must defer — hit refs are
+        rolled back so decode can free pages in the meantime."""
         hit_pages = self._match_prefix(req, chains)
         n_hit = len(hit_pages)
         new_pages = self.pool.alloc(need - n_hit, evict_cb=self._spill)
@@ -704,16 +783,34 @@ class PagedEngine(ContinuousEngine):
             return None
         pages = hit_pages + new_pages
         req.pages = pages
-        hit_len = n_hit * pg
-        req.prefix_hit_tokens = hit_len
+        req.prefix_hit_tokens = n_hit * self.page_size
         with self._lock:
-            self._prompt_tokens += L
-            self._hit_tokens += hit_len
+            self._prompt_tokens += len(req.prompt)
+            self._hit_tokens += n_hit * self.page_size
+        return pages, n_hit
 
+    def _install_slot(self, req: Request, pages: List[int]) -> int:
+        """Acquire a decode slot and point its block-table row at pages."""
         slot = self.slots.acquire(req)
-        row = np.full(M, SCRATCH_PAGE, np.int32)
+        row = np.full(self.pages_per_seq, SCRATCH_PAGE, np.int32)
         row[:len(pages)] = pages
         self._table[slot] = row
+        return slot
+
+    def _admit_one(self, req: Request) -> Optional[int]:
+        pg, M = self.page_size, self.pages_per_seq
+        L = len(req.prompt)
+        need = -(-(L + req.max_new_tokens) // pg)
+        chains = (chain_keys(req.prompt, pg) if self.scfg.prefix_cache
+                  else [])
+        got = self._reserve_pages(req, chains, need)
+        if got is None:
+            return None
+        pages, n_hit = got
+        hit_len = n_hit * pg
+
+        slot = self._install_slot(req, pages)
+        row = self._table[slot]
         # Hit pages scatter to the scratch page (never rewrite shared pages).
         assign = np.full(M, SCRATCH_PAGE, np.int32)
         assign[n_hit:len(pages)] = pages[n_hit:]
@@ -770,6 +867,237 @@ class PagedEngine(ContinuousEngine):
         s["resident_cache_bytes"] = self.cache_bytes()
         s["prefix_hit_rate"] = hit / prompt if prompt else 0.0
         return s
+
+
+class PrefillWorker(PagedEngine):
+    """The *prefill endpoint* of a disaggregated serve plane.
+
+    A full ``PagedEngine`` (own page pool, own prefix index, own cold tier)
+    that only ever runs the fused bucket-prefill/admit program: instead of
+    joining a decode batch, the freshly-computed KV pages are sliced out of
+    the pool (``read_page``), staged to host memory, and returned as a
+    transferable ``KVHandoff``.  The slot and pages are released
+    immediately — full prompt pages stay behind in the prefix index, so
+    prompts sharing a prefix are prefilled once per *endpoint*, not once per
+    request."""
+
+    def prefill_to_handoff(self, rid: int, prompt: np.ndarray,
+                           max_new_tokens: int,
+                           sampling: SamplingParams) -> Optional[KVHandoff]:
+        """Bucket-prefill ``prompt`` and export its KV pages.  Returns None
+        when this endpoint is out of pages (the caller prefills locally)."""
+        # max_new_tokens=1 on the worker request: allocate only the pages
+        # the prompt (plus the sampled first token's logical page) covers —
+        # the decode endpoint owns the decode-horizon pages.
+        req = Request(next(self._rid), np.asarray(prompt, np.int32), 1,
+                      sampling)
+        tok0 = self._admit_one(req)
+        if tok0 is None:
+            return None
+        pg = self.page_size
+        n_prompt = -(-len(req.prompt) // pg)
+        blobs = [jax.device_get(self._read_page_prog(
+                     self.states, jnp.asarray(p, jnp.int32)))
+                 for p in req.pages[:n_prompt]]
+        handoff = KVHandoff(
+            rid=rid, prompt_len=len(req.prompt),
+            max_new_tokens=max_new_tokens, first_token=tok0,
+            page_blobs=blobs, chains=chain_keys(req.prompt, pg),
+            sampling=dataclasses.asdict(req.sampling))
+        self._release_slot(req.slot)        # pages unref'd; full prompt
+        return handoff                      # pages stay prefix-cached
+
+
+class DisaggregatedEngine(PagedEngine):
+    """Prefill/decode disaggregation across two engine endpoints (advice #3:
+    the off-path device is a *new endpoint in the network*, an independent
+    worker — not a cache bolted onto the data path).
+
+    This instance is the **decode endpoint**: it owns the decode batch, the
+    decode-side page pool and the result store.  A second engine instance —
+    a ``PrefillWorker`` — is the **prefill endpoint**.  Per request, the
+    ``PrefillRoutePlanner``/``CostModel`` pair decides (prompt length vs.
+    handoff link cost, scaled by decode batch pressure) whether to:
+
+      * **route remote** — the prefill endpoint bucket-prefills the prompt
+        and publishes the KV pages + first token + sampling state as a
+        ``KVHandoff`` blob through a ``ShardedStore`` hash-sharded by
+        request id over peer endpoints (dicts in-process,
+        ``BlobEndpoint``-wrapped ``PeerEndpoint`` directories across hosts);
+        the decode endpoint consumes the blob, faults the pages into its own
+        ``KVBlockPool`` (deduping against its prefix index first) and joins
+        the request into the running decode batch — no prefill program ever
+        steals a decode step here; or
+      * **prefill locally** — short prompts lose to the link latency floor
+        and take the ordinary ``PagedEngine`` admit path.
+
+    Every decision lands in an ``OffloadPlan`` (``route_plan().to_table()``)
+    so the serve plane's placement rationale stays as explainable as the
+    training plane's.  On this container both endpoints live in one
+    process; the handoff blob is the deliberately narrow interface, exactly
+    how ``core.endpoint`` abstracts peers."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 policy: ExecPolicy = ExecPolicy(),
+                 executor: Optional[BackgroundExecutor] = None,
+                 result_endpoints: Optional[Sequence[Any]] = None,
+                 handoff_endpoints: Optional[Sequence[Any]] = None,
+                 profile: Optional[Any] = None):
+        super().__init__(cfg, params, scfg, policy, executor,
+                         result_endpoints)
+        pre_scfg = dataclasses.replace(
+            scfg, max_batch=max(1, scfg.prefill_slots),
+            num_pages=scfg.prefill_pages, disaggregate=False)
+        self.prefill = PrefillWorker(cfg, params, pre_scfg, policy,
+                                     executor=self.executor)
+        endpoints = (list(handoff_endpoints)
+                     if handoff_endpoints is not None
+                     else [dict() for _ in range(max(1, scfg.handoff_shards))])
+        self.handoff_store = ShardedStore(endpoints)
+        n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+        self.router = PrefillRoutePlanner(flops_per_token=2.0 * n_params,
+                                          profile=profile)
+        # Decode-side bytes one handoff page carries (the link-cost input).
+        self._page_bytes = self.cache_bytes() / max(1, self.pool.num_pages)
+        self.prefill_seconds = 0.0      # time spent on the other endpoint
+        self._remote_admits = 0
+        self._local_admits = 0
+        self._deferred_imports = 0
+        self._handoff_bytes = 0
+        # rid -> routing decision, so a deferred admission retries with the
+        # same placement instead of re-deciding (and re-counting) each
+        # attempt; entries clear once the request is actually admitted.
+        self._route_cache: Dict[int, bool] = {}
+
+    # -- routing ---------------------------------------------------------------
+    def _route_remote(self, req: Request) -> bool:
+        mode = self.scfg.disagg_route
+        if mode in ("remote", "local"):
+            self.router.note_forced(req.rid, mode == "remote",
+                                    f"disagg_route={mode!r}")
+            return mode == "remote"
+        n_pages = -(-len(req.prompt) // self.page_size)
+        d = self.router.route(req.rid, len(req.prompt),
+                              n_pages * self._page_bytes,
+                              len(self.slots.active()), self.scfg.max_batch)
+        return d.placement == Placement.SIDECAR_ASYNC
+
+    def route_plan(self):
+        """The accumulated per-request routing decisions as an
+        ``OffloadPlan`` — ``.to_table()`` is the explainability exhibit."""
+        return self.router.plan()
+
+    # -- admission -------------------------------------------------------------
+    def _admit_one(self, req: Request) -> Optional[int]:
+        key = f"kv/{req.rid}"
+        data = self.handoff_store.pop(key)  # deferred import retrying?
+        if data is None:
+            remote = self._route_cache.get(req.rid)
+            if remote is None:
+                remote = self._route_remote(req)
+                self._route_cache[req.rid] = remote
+            if not remote:
+                return self._admit_local(req)
+            t0 = time.perf_counter()
+            handoff = self.prefill.prefill_to_handoff(
+                req.rid, req.prompt, req.max_new_tokens, req.sampling)
+            self.prefill_seconds += time.perf_counter() - t0
+            if handoff is None:             # prefill endpoint out of pages:
+                return self._admit_local(req)   # degrade this attempt
+            # Publish-then-consume through the store on purpose, even though
+            # both endpoints share this process: the blob crossing the
+            # ShardedStore/BlobEndpoint boundary *is* the endpoint
+            # interface, and keeping it on the path keeps the reported
+            # decode-side cost honest about the link.
+            self.handoff_store.put(key, pack_handoff(handoff))
+            data = self.handoff_store.pop(key)
+        tok0 = self._import_handoff(req, unpack_handoff(data))
+        if tok0 is None:
+            # Decode pool exhausted: keep the blob so the deferred-admission
+            # retry imports it instead of re-running the remote prefill.
+            self.handoff_store.put(key, data)
+            self._deferred_imports += 1
+            return None
+        self._remote_admits += 1            # counted once, on success only
+        self._handoff_bytes += len(data)
+        self._route_cache.pop(req.rid, None)
+        return tok0
+
+    def _admit_local(self, req: Request) -> Optional[int]:
+        tok0 = super()._admit_one(req)
+        if tok0 is not None:                # deferred attempts don't count
+            self._local_admits += 1
+            self._route_cache.pop(req.rid, None)
+        return tok0
+
+    def _import_handoff(self, req: Request,
+                        h: KVHandoff) -> Optional[int]:
+        """Fault a handoff's pages into the decode-side pool and splice the
+        request into the decode batch — the decode half of the narrow
+        interface.  Pages the decode-side prefix index already holds (hot or
+        cold) are reused instead of imported; imported full prompt pages are
+        registered for future sharing, so both endpoints keep their own
+        working prefix caches."""
+        pg = self.page_size
+        L = h.prompt_len
+        n_prompt = h.num_prompt_pages(pg)
+        # A blob popped at kv/{rid} must actually be *this* request's: a
+        # colliding rid against a persistent handoff store (relaunch over
+        # the same BlobEndpoint directories) would otherwise splice another
+        # prompt's KV pages into the batch silently.
+        if (h.rid != req.rid or L != len(req.prompt)
+                or h.max_new_tokens != req.max_new_tokens
+                or n_prompt != len(h.page_blobs)):
+            raise ValueError(
+                f"stale/malformed handoff at kv/{req.rid}: blob carries "
+                f"rid={h.rid} prompt_len={L} max_new={h.max_new_tokens} "
+                f"({len(h.page_blobs)} page blobs, expected {n_prompt})")
+        need = -(-(L + req.max_new_tokens) // pg)
+        chains = [bytes(c) for c in h.chains] if self.scfg.prefix_cache \
+            else []
+        got = self._reserve_pages(req, chains, need)
+        if got is None:                     # decode pool exhausted: defer
+            return None
+        pages, n_hit = got
+
+        for i in range(n_hit, n_prompt):            # fault transferred pages
+            self.states = self._write_page_prog(
+                self.states, jnp.asarray(pages[i], jnp.int32),
+                h.page_blobs[i])
+        slot = self._install_slot(req, pages)
+        # The blob's sampling state is the wire-format truth (a cross-host
+        # decode endpoint has no Request object to fall back on).
+        sp = h.sampling
+        m = self._mirrors
+        self._mirrors = {
+            "tok": m["tok"].at[slot].set(h.first_token),
+            "pos": m["pos"].at[slot].set(L),
+            "temp": m["temp"].at[slot].set(float(sp["temperature"])),
+            "top_k": m["top_k"].at[slot].set(int(sp["top_k"])),
+            "top_p": m["top_p"].at[slot].set(float(sp["top_p"])),
+        }
+        if self.scfg.prefix_cache:
+            self._register_prefix(req, chains, pages, n_hit)
+        return int(h.first_token)
+
+    # -- introspection / lifecycle ---------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        s = super().stats()
+        s["prefill_endpoint"] = {
+            "pool": self.prefill.pool.stats(),
+            "busy_s": round(self.prefill_seconds, 4),
+        }
+        s["handoffs"] = {
+            "remote_admits": self._remote_admits,
+            "local_admits": self._local_admits,
+            "deferred_imports": self._deferred_imports,
+            "bytes": self._handoff_bytes,
+        }
+        return s
+
+    def close(self) -> None:
+        self.prefill.close()
+        super().close()
 
 
 class FixedBatchEngine:

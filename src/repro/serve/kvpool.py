@@ -24,7 +24,9 @@ logical pages scatter harmlessly instead of corrupting live pages.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
+import pickle
 import threading
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -80,6 +82,11 @@ class KVBlockPool:
         self.lookup_pages = 0
         self.faults = 0
         self.spills = 0
+        # Accounting-drift counters: non-zero means a caller bug, but the
+        # pool degrades (alloc -> None / unref ignored) instead of killing
+        # the engine thread that hit it.
+        self.alloc_failures = 0
+        self.unref_underflows = 0
 
     # -- capacity ------------------------------------------------------------
     def free_count(self) -> int:
@@ -101,7 +108,13 @@ class KVBlockPool:
               ) -> Optional[List[int]]:
         """Take ``n`` pages, evicting LRU cached prefixes when the free stack
         runs dry (``evict_cb(page, chain)`` spills content *before* reuse).
-        Returns None — and takes nothing — if the pool cannot satisfy ``n``."""
+        Returns None — and takes nothing — if the pool cannot satisfy ``n``.
+
+        This sits on the serve hot path, so it must never throw on internal
+        accounting drift: if ``available()`` over-promised (a refcount bug
+        upstream), the partially-taken pages are rolled back onto the free
+        stack and the call degrades to None — the engine's deferred-admission
+        path retries later instead of the decode thread dying."""
         if self.available() < n:
             return None
         got: List[int] = []
@@ -109,8 +122,13 @@ class KVBlockPool:
             if self._free:
                 got.append(self._free.pop())
                 continue
-            evicted = self.evict_one(evict_cb)
-            assert evicted is not None, "available() promised a page"
+            if self.evict_one(evict_cb) is None:
+                # available() promised a page that isn't there: roll back
+                # (pop order reversed restores the original stack) and defer.
+                while got:
+                    self._free.append(got.pop())
+                self.alloc_failures += 1
+                return None
         for p in got:
             self._refs[p] = 1
         return got
@@ -121,7 +139,12 @@ class KVBlockPool:
         self._refs[page] += 1
 
     def unref(self, page: int) -> None:
-        assert self._refs[page] > 0, f"page {page} not referenced"
+        if self._refs[page] <= 0:
+            # Double-unref is an upstream bug, but the page is already
+            # free/cached — count it and carry on rather than kill the
+            # engine thread mid-decode.
+            self.unref_underflows += 1
+            return
         self._refs[page] -= 1
         if self._refs[page] > 0:
             return
@@ -182,6 +205,8 @@ class KVBlockPool:
             "prefix_lookup_pages": self.lookup_pages,
             "faults": self.faults,
             "spills": self.spills,
+            "alloc_failures": self.alloc_failures,
+            "unref_underflows": self.unref_underflows,
         }
 
 
@@ -200,7 +225,8 @@ class ColdTier:
         self.capacity = capacity_pages
         self._store: "OrderedDict[bytes, Any]" = OrderedDict()
         self._lock = threading.Lock()
-        self.dropped = 0
+        self.dropped = 0        # LRU entries lost to capacity pressure
+        self.rejected = 0       # puts refused outright (capacity <= 0)
 
     def __len__(self) -> int:
         with self._lock:
@@ -208,8 +234,16 @@ class ColdTier:
 
     def put(self, chain: bytes, blob: Any) -> None:
         with self._lock:
+            if self.capacity <= 0:
+                # A zero-capacity tier accepts nothing: inserting and then
+                # immediately dropping the same entry would skew ``dropped``
+                # (which should count entries that *lost an LRU race*).
+                self.rejected += 1
+                return
             self._store[chain] = blob
             self._store.move_to_end(chain)
+            # capacity >= 1 and the new entry sits at the MRU end, so the
+            # LRU pop below can never evict the entry just inserted.
             while len(self._store) > self.capacity:
                 self._store.popitem(last=False)
                 self.dropped += 1
@@ -230,3 +264,47 @@ class ColdTier:
     def contains(self, chain: bytes) -> bool:
         with self._lock:
             return chain in self._store
+
+
+# ----------------------------------------------------------------------------
+# Prefill -> decode handoff (disaggregated serving, paper advice #3)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVHandoff:
+    """Everything a decode endpoint needs to join a request mid-stream.
+
+    Produced by the prefill endpoint after bucket prefill: the KV content of
+    every page covering the prompt (``page_blobs[i]`` is the numpy tree a
+    ``read_page`` slice yields for logical page ``i``; the last one may be
+    partially filled), the chain keys of the *full* prompt pages (so the
+    decode side can dedupe against its own prefix index before faulting
+    pages in, and index the imported ones for future sharing), the first
+    sampled token, and the sampling state the decode batch must mirror.
+    The blob is deliberately narrow — it is the wire format between the two
+    endpoints, the same way ``core.endpoint`` keeps peers narrow."""
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    first_token: int
+    page_blobs: List[Any]            # one numpy tree per prompt page
+    chains: List[bytes]              # chain keys of the full prompt pages
+    sampling: Dict[str, Any]         # temperature / top_k / top_p / eos_id
+
+    def num_prompt_pages(self, page_size: int) -> int:
+        return -(-self.prompt_len // page_size)
+
+
+def pack_handoff(h: KVHandoff) -> bytes:
+    """Serialize a handoff for transport through a ``ShardedStore`` over
+    ``PeerEndpoint`` blobs.  The link between the prefill and decode
+    endpoints is an internal, trusted one (same pod / same process here), so
+    plain pickling is the honest minimal wire format.  The dataclass is
+    pickled directly — ``dataclasses.asdict`` would deep-copy every KV page
+    blob (the dominant payload) just to throw the copy away."""
+    return pickle.dumps(h, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def unpack_handoff(data: bytes) -> KVHandoff:
+    obj = pickle.loads(data)
+    return obj if isinstance(obj, KVHandoff) else KVHandoff(**obj)

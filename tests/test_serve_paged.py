@@ -68,6 +68,46 @@ def test_chain_keys_commit_to_whole_prefix():
     assert chain_keys(t1[:15], 8) == k1[:1]     # partial pages are not keyed
 
 
+def test_chain_keys_boundary_lengths():
+    assert chain_keys(np.zeros(0, np.int32), 8) == []      # empty
+    assert chain_keys(np.arange(5, dtype=np.int32), 8) == []   # < one page
+    exact = chain_keys(np.arange(16, dtype=np.int32), 8)
+    assert len(exact) == 2                                 # exact multiple
+    assert chain_keys(np.arange(17, dtype=np.int32), 8) == exact  # +partial
+
+
+def test_prompt_boundary_lengths_decode_exactly(tiny_engine_parts):
+    """Prompts shorter than one page and exactly a page multiple must both
+    survive the paged prefill/prefix-index path and match dense decode."""
+    cfg, params = tiny_engine_parts
+    rng = np.random.default_rng(7)
+    prompts = [_prompt(rng, cfg, n) for n in (3, 8, 16)]   # <page, =1pg, =2pg
+    dense = ContinuousEngine(cfg, params, _scfg())
+    paged = PagedEngine(cfg, params, _scfg())
+    d = dense.generate(prompts, 6)
+    p = paged.generate(prompts, 6)
+    for i in range(len(prompts)):
+        assert d[i].output == p[i].output
+    # resubmitting an exact-page-multiple prompt reuses its full pages
+    again = paged.generate([prompts[2]], 6)
+    assert again[0].output == d[2].output
+    assert paged.pool.stats()["prefix_hit_pages"] > 0
+    dense.close()
+    paged.close()
+
+
+def test_empty_prompt_rejected_at_submit(tiny_engine_parts):
+    """An empty prompt must fail fast at submit() with a clear error, not
+    deep inside prefill bucketing."""
+    cfg, params = tiny_engine_parts
+    eng = PagedEngine(cfg, params, _scfg())
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(np.zeros(0, np.int32), 4)
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(np.zeros((2, 3), np.int32), 4)          # wrong rank too
+    eng.close()
+
+
 def test_cold_tier_capacity_and_replace():
     tier = ColdTier(capacity_pages=2)
     tier.put(b"k1", "dev1")
