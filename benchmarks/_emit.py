@@ -1,0 +1,21 @@
+"""Benchmark result emission: ``BENCH_<name>.json`` at the repo root.
+
+Every benchmark writes its headline numbers through ``emit`` so the perf
+trajectory is machine-readable — CI asserts the files exist, and a regression
+shows up as a diff instead of a vanished stdout line.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def emit(name: str, payload: Dict[str, Any]) -> Path:
+    """Write ``payload`` to ``BENCH_<name>.json`` at the repo root."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path.name}")
+    return path

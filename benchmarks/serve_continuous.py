@@ -35,6 +35,8 @@ from repro.config import ServeConfig, TrainConfig, get_config
 from repro.serve.engine import ContinuousEngine, FixedBatchEngine, QueueFull
 from repro.train.steps import init_train_state
 
+from _emit import emit
+
 
 @dataclasses.dataclass
 class TraceItem:
@@ -107,7 +109,12 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace / single rep for CI")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 12)
+        args.reps = 1
 
     cfg = get_config("repro-tiny")
     state = init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
@@ -150,6 +157,16 @@ def main() -> None:
     print(f"{'continuous':<12} {c_wall:>8.2f} {c_useful:>10d} "
           f"{c_tps:>8.1f} {1e3*c_ttft:>12.0f}")
     print(f"speedup: {c_tps/f_tps:.2f}x useful-token throughput")
+    emit("serve_continuous", {
+        "trace_requests": len(trace),
+        "slots": args.max_batch,
+        "smoke": args.smoke,
+        "fixed": {"wall_s": f_wall, "useful_tokens": f_useful,
+                  "tok_s": f_tps, "mean_ttft_s": f_ttft},
+        "continuous": {"wall_s": c_wall, "useful_tokens": c_useful,
+                       "tok_s": c_tps, "mean_ttft_s": c_ttft},
+        "speedup": c_tps / f_tps,
+    })
     cont.close()
     assert c_tps > f_tps, (
         f"continuous ({c_tps:.1f} tok/s) must beat fixed ({f_tps:.1f} tok/s)")

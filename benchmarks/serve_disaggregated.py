@@ -39,6 +39,8 @@ from repro.core.endpoint import BlobEndpoint, EndpointRegistry
 from repro.serve.engine import DisaggregatedEngine, PagedEngine, QueueFull
 from repro.train.steps import init_train_state
 
+from _emit import emit
+
 
 @dataclasses.dataclass
 class TraceItem:
@@ -177,6 +179,17 @@ def main() -> None:
     mismatches = [i for i in s_out if s_out[i] != d_out[i]]
     assert not mismatches, f"disaggregated != single for requests {mismatches}"
     print("disaggregated outputs identical to single-engine: OK")
+    emit("serve_disaggregated", {
+        "trace_requests": len(trace),
+        "smoke": args.smoke,
+        "route": args.route,
+        "single": {"wall_s": s_wall, "tok_s": s_tps, "mean_ttft_s": s_ttft},
+        "disaggregated": {"wall_s": d_wall, "decode_s": d_decode,
+                          "tok_s_decode": d_tps, "mean_ttft_s": d_ttft,
+                          "prefill_s": pre_s,
+                          "handoffs": dstats["handoffs"]},
+        "exact_vs_single": True,
+    })
     if args.route != "local":
         assert dstats["handoffs"]["remote_admits"] > 0, \
             "expected at least one remote prefill on this trace"

@@ -32,6 +32,8 @@ from repro.config import ServeConfig, TrainConfig, get_config
 from repro.serve.engine import ContinuousEngine, PagedEngine, QueueFull
 from repro.train.steps import init_train_state
 
+from _emit import emit
+
 
 @dataclasses.dataclass
 class TraceItem:
@@ -152,6 +154,17 @@ def main() -> None:
     mismatches = [i for i in d_out if d_out[i] != p_out[i]]
     assert not mismatches, f"paged != dense for requests {mismatches}"
     print("paged outputs identical to dense: OK")
+    emit("serve_paged", {
+        "trace_requests": len(trace),
+        "smoke": args.smoke,
+        "dense": {"slots": B, "cache_bytes": d_bytes, "wall_s": d_wall,
+                  "tok_s": d_tps, "mean_ttft_s": d_ttft},
+        "paged": {"slots": 2 * B, "cache_bytes": p_bytes, "wall_s": p_wall,
+                  "tok_s": p_tps, "mean_ttft_s": p_ttft,
+                  "prefix_hit_rate": pstats["prefix_hit_rate"],
+                  "kv_pool": pstats["kv_pool"]},
+        "exact_vs_dense": True,
+    })
     if not args.smoke:
         assert pstats["prefix_hit_rate"] > 0.2, \
             "shared-prefix trace should reuse prefix pages"

@@ -1,10 +1,12 @@
 from repro.config.model import ModelConfig, MIX_ATTN, MIX_ATTN_LOCAL, MIX_ATTN_CROSS, MIX_RGLRU, MIX_RWKV6
-from repro.config.run import MeshConfig, OffloadConfig, TrainConfig, ServeConfig
+from repro.config.run import (
+    EngineMode, MeshConfig, OffloadConfig, TrainConfig, ServeConfig)
 from repro.config.registry import get_config, list_archs, register
 from repro.config.shapes import SHAPES, ShapeSpec, input_specs, shape_applicable
 
 __all__ = [
-    "ModelConfig", "MeshConfig", "OffloadConfig", "TrainConfig", "ServeConfig",
+    "EngineMode", "ModelConfig", "MeshConfig", "OffloadConfig", "TrainConfig",
+    "ServeConfig",
     "get_config", "list_archs", "register",
     "SHAPES", "ShapeSpec", "input_specs", "shape_applicable",
     "MIX_ATTN", "MIX_ATTN_LOCAL", "MIX_ATTN_CROSS", "MIX_RGLRU", "MIX_RWKV6",

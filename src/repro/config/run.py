@@ -2,7 +2,22 @@
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Optional, Tuple
+
+
+class EngineMode(str, enum.Enum):
+    """Which serve engine ``repro.serve.make_engine`` builds.
+
+    Replaces the old boolean sprawl (``paged=...``, ``disaggregate=...``):
+    one request path, five implementations of increasing distribution —
+    fixed-batch baseline, continuous batching, paged KV-cache, disaggregated
+    prefill/decode, and the multi-replica cluster."""
+    FIXED = "fixed"
+    CONTINUOUS = "continuous"
+    PAGED = "paged"
+    DISAGGREGATED = "disaggregated"
+    CLUSTER = "cluster"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,10 +118,18 @@ class ServeConfig:
     # Disaggregated prefill/decode serving (DisaggregatedEngine): prefill
     # runs on a second engine endpoint; KV pages come back as a handoff
     # blob hash-sharded over peer endpoints.
-    disaggregate: bool = False       # split prefill onto its own endpoint
+    disaggregate: bool = False       # DEPRECATED: use engine_mode
     disagg_route: str = "auto"       # "auto" (cost model per request) |
     #                                  "remote" | "local" (forced)
     prefill_slots: int = 2           # prefill-endpoint slot count
     prefill_pages: int = 0           # prefill-endpoint pool pages (0 -> full
     #                                  residency, like num_pages)
     handoff_shards: int = 2          # ShardedStore endpoints for handoffs
+    # Engine selection (EngineMode): "" -> derived from the legacy booleans
+    # above ("continuous" when none are set).  New code sets this instead.
+    engine_mode: str = ""
+    # Multi-replica serve cluster (ServeCluster, engine_mode="cluster"):
+    # N decode replicas (each a PagedEngine) behind a cost-model router.
+    num_replicas: int = 2
+    cluster_prefill: bool = True     # shared PrefillWorker endpoint feeding
+    #                                  replicas via KV handoffs

@@ -30,6 +30,7 @@ class Placement(enum.Enum):
     ACCELERATOR = "accelerator"
     SIDECAR_ASYNC = "sidecar_async"
     SIDECAR_SYNC = "sidecar_sync"
+    REPLICA = "replica"               # routed to one decode replica of N
     REJECTED = "rejected"
 
 
@@ -54,6 +55,23 @@ class Decision:
     est_sidecar_s: float              # compute+link, as if synchronous
     est_link_s: float
     rationale: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSignals:
+    """One decode replica's live state, as the router sees it.
+
+    These are exactly the signals arXiv:2212.07868 argues an endpoint-aware
+    router must weigh (each endpoint's compute/occupancy asymmetry) plus the
+    page-locality input of arXiv:2507.04001 (``hit_pages``: how much of this
+    prompt's KV is already resident there)."""
+    name: str
+    free_slots: int                   # decode slots not occupied
+    queue_depth: int                  # requests already waiting there
+    max_slots: int
+    free_pages: int                   # KV pool pages allocatable now
+    hit_pages: int = 0                # leading prompt pages resident (hot/cold)
+    alive: bool = True
 
 
 def prefill_task(name: str, prompt_tokens: int, flops_per_token: float,
@@ -123,6 +141,66 @@ class CostModel:
             Placement.DEVICE, dev, link, link,
             f"local prefill: handoff link {link:.2e}s >= stall "
             f"{stall:.2e}s (short prompt / idle decode batch)")
+
+    def replica_cost(self, prompt_tokens: int, pages_needed: int,
+                     flops_per_token: float, page_size: int,
+                     r: ReplicaSignals) -> float:
+        """Estimated seconds until this replica has produced the request's
+        first token: suffix prefill (tokens whose KV pages are NOT already
+        resident there — affinity makes hit-heavy replicas cheap), queue
+        wait (each queued request admits first, a full prompt's prefill
+        each), and occupancy/page-pressure penalties for work that would
+        land behind evictions or deferrals rather than in a free slot."""
+        hit_tokens = min(r.hit_pages * page_size, prompt_tokens)
+        per_tok = flops_per_token / self.p.accel_flops
+        suffix = max(prompt_tokens - hit_tokens, 1) * per_tok
+        wait = r.queue_depth * prompt_tokens * per_tok
+        cost = suffix + wait
+        if r.free_slots <= r.queue_depth:
+            # No slot left after the queue drains: this admission stalls
+            # behind a decode completion of unknown distance.
+            cost *= 2.0 + r.queue_depth
+        short = max(0, pages_needed - r.hit_pages - r.free_pages)
+        if short > 0:
+            # Pages must come from evictions (spill traffic) or deferral.
+            cost *= 1.0 + short
+        return cost
+
+    def decide_replica(self, prompt_tokens: int, pages_needed: int,
+                       flops_per_token: float, page_size: int,
+                       replicas: "list[ReplicaSignals]"
+                       ) -> "tuple[int, Decision]":
+        """Pick the decode replica for one request: argmin of
+        ``replica_cost`` over live replicas, lowest index breaking ties (so
+        routing is deterministic under equal load).  Returns ``(index,
+        Decision)``; index is -1 with a REJECTED decision when no replica is
+        alive — the caller's requeue/fail path, not an exception, because a
+        router losing its last replica is an operational state."""
+        best, best_cost = -1, float("inf")
+        costs = []
+        for i, r in enumerate(replicas):
+            if not r.alive:
+                costs.append(None)
+                continue
+            c = self.replica_cost(prompt_tokens, pages_needed,
+                                  flops_per_token, page_size, r)
+            costs.append(c)
+            if c < best_cost:
+                best, best_cost = i, c
+        if best < 0:
+            return -1, Decision(
+                Placement.REJECTED, 0.0, 0.0, 0.0,
+                f"no live replica among {len(replicas)}")
+        r = replicas[best]
+        others = ", ".join(
+            f"{q.name}={c:.2e}s" if c is not None else f"{q.name}=dead"
+            for q, c in zip(replicas, costs) if q is not r)
+        return best, Decision(
+            Placement.REPLICA, best_cost, 0.0, 0.0,
+            f"replica {r.name}: est {best_cost:.2e}s "
+            f"(hit {r.hit_pages}p, {r.free_slots} free slots, "
+            f"queue {r.queue_depth}, {r.free_pages} free pages)"
+            + (f" beats {others}" if others else " — only live replica"))
 
     # -- the guideline logic ---------------------------------------------------
     def decide(self, t: TaskProfile) -> Decision:

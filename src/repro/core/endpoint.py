@@ -116,6 +116,19 @@ class PeerEndpoint:
         except FileNotFoundError:
             return False
 
+    def list(self, prefix: str = "") -> List[str]:
+        """Every stored key (relative path) under ``prefix``."""
+        keys = []
+        for dirpath, _, files in os.walk(self.root):
+            for f in files:
+                if f.endswith(".tmp"):
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, f), self.root)
+                rel = rel.replace(os.sep, "/")
+                if rel.startswith(prefix):
+                    keys.append(rel)
+        return keys
+
 
 class BlobEndpoint:
     """Dict-shaped adapter over a ``PeerEndpoint`` so a ``ShardedStore`` can
@@ -145,6 +158,9 @@ class BlobEndpoint:
         data = self.peer.read(key)
         self.peer.delete(key)
         return data
+
+    def keys(self) -> List[str]:
+        return self.peer.list()
 
 
 class EndpointRegistry:
@@ -211,6 +227,18 @@ class ShardedStore:
         """Consume a key (one-shot payloads like KV handoffs).  Works over
         both dict endpoints and ``BlobEndpoint`` peers."""
         return self.endpoints[self.owner(key)].pop(key, default)
+
+    def drop_prefix(self, prefix: str) -> int:
+        """Delete every key under ``prefix`` across all endpoints; returns
+        the number dropped.  The serve cluster uses this to clear a dead
+        replica's pending one-shot payloads (KV handoffs published under its
+        key namespace that no consumer will ever pop)."""
+        dropped = 0
+        for ep in self.endpoints:
+            for key in [k for k in ep.keys() if k.startswith(prefix)]:
+                ep.pop(key, None)
+                dropped += 1
+        return dropped
 
     def balance(self) -> List[int]:
         counts = [0] * len(self.endpoints)

@@ -15,7 +15,8 @@ from typing import Dict, List, Optional
 from repro.config.run import OffloadConfig
 from repro.core.characterize import SidecarProfile, characterize
 from repro.core.costmodel import (
-    CostModel, Decision, Placement, TaskProfile, prefill_task)
+    CostModel, Decision, Placement, ReplicaSignals, TaskProfile,
+    prefill_task)
 
 
 @dataclasses.dataclass
@@ -167,4 +168,58 @@ class PrefillRoutePlanner:
     def plan(self) -> OffloadPlan:
         # Raw _profile on purpose: rendering the table of forced decisions
         # must not trigger a characterization run.
+        return OffloadPlan(dict(self._decisions), self._profile)
+
+
+class ReplicaRoutePlanner:
+    """Per-request decode-replica placement for the serve cluster.
+
+    The multi-replica sibling of ``PrefillRoutePlanner``: each ``route``
+    call scores every live replica through ``CostModel.decide_replica``
+    (suffix-prefill cost after prefix-affinity hits, queue wait, slot/page
+    pressure) and records the decision, so cluster routing stays as
+    explainable as training offload — ``plan().to_table()`` lists each
+    request, the replica it landed on, and why it beat the others."""
+
+    def __init__(self, flops_per_token: float, page_size: int,
+                 profile: Optional[SidecarProfile] = None,
+                 keep_last: int = 256):
+        self.flops_per_token = flops_per_token
+        self.page_size = page_size
+        # Replica scoring only compares accel-side costs, so the datasheet
+        # default profile is fine; a measured one sharpens the estimates.
+        self._profile = profile
+        self._cost_model: Optional[CostModel] = None
+        self.keep_last = keep_last
+        self._decisions: Dict[str, Decision] = {}
+        self.picks: Dict[str, int] = {}          # replica name -> routed count
+        self.rejections = 0                      # no-live-replica events
+
+    @property
+    def cost_model(self) -> CostModel:
+        if self._cost_model is None:
+            p = self._profile or characterize(quick=True)
+            self._profile = p
+            self._cost_model = CostModel(p)
+        return self._cost_model
+
+    def route(self, rid: int, prompt_tokens: int, pages_needed: int,
+              replicas: List[ReplicaSignals]) -> "tuple[int, Decision]":
+        idx, d = self.cost_model.decide_replica(
+            prompt_tokens, pages_needed, self.flops_per_token,
+            self.page_size, replicas)
+        if idx >= 0:
+            name = replicas[idx].name
+            self.picks[name] = self.picks.get(name, 0) + 1
+        else:
+            self.rejections += 1
+        self._note(f"route/req{rid}", d)
+        return idx, d
+
+    def _note(self, name: str, d: Decision) -> None:
+        self._decisions[name] = d
+        while len(self._decisions) > self.keep_last:
+            self._decisions.pop(next(iter(self._decisions)))
+
+    def plan(self) -> OffloadPlan:
         return OffloadPlan(dict(self._decisions), self._profile)

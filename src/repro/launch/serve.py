@@ -6,18 +6,23 @@
 Requests with random prompt lengths / token budgets are submitted through the
 admission plane; the engine interleaves them over the fixed-shape decode
 batch and reports per-request TTFT plus aggregate throughput.
+
+Engine selection is one axis: ``--engine-mode
+{fixed,continuous,paged,disaggregated,cluster}`` (see
+``repro.serve.make_engine``).  The old ``--paged`` / ``--disaggregate``
+booleans still work for one release and warn.
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import numpy as np
 
-from repro.config import ServeConfig, TrainConfig, get_config
-from repro.serve.engine import (
-    ContinuousEngine, DisaggregatedEngine, PagedEngine, QueueFull)
+from repro.config import EngineMode, ServeConfig, TrainConfig, get_config
+from repro.serve import QueueFull, ServeCluster, make_engine
 from repro.serve.sampler import SamplingParams
 from repro.train.steps import init_train_state
 
@@ -32,23 +37,36 @@ def main() -> None:
     ap.add_argument("--mean-new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--paged", action="store_true",
-                    help="paged KV-cache engine (block tables + prefix "
-                         "reuse + cold-tier spill); global-attn archs only")
+    ap.add_argument("--engine-mode", default="",
+                    choices=[m.value for m in EngineMode] + [""],
+                    help="which serve engine to run (default: continuous)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="decode replicas (engine-mode=cluster)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV pool pages (0 -> full residency per slot)")
     ap.add_argument("--no-prefix-cache", action="store_true")
-    ap.add_argument("--disaggregate", action="store_true",
-                    help="split serving across a prefill endpoint and a "
-                         "decode endpoint: long prompts prefill remotely "
-                         "and their KV pages arrive as a handoff blob "
-                         "(implies the paged engine)")
     ap.add_argument("--route", default="auto",
                     choices=("auto", "remote", "local"),
                     help="prefill routing: cost model per request (auto) "
-                         "or forced")
+                         "or forced (engine-mode=disaggregated)")
+    # Legacy engine selectors, kept one release:
+    ap.add_argument("--paged", action="store_true",
+                    help="DEPRECATED: use --engine-mode paged")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="DEPRECATED: use --engine-mode disaggregated")
     args = ap.parse_args()
+
+    mode = args.engine_mode
+    if not mode and args.paged:
+        warnings.warn("--paged is deprecated; use --engine-mode paged",
+                      DeprecationWarning, stacklevel=2)
+        mode = EngineMode.PAGED.value
+    if not mode and args.disaggregate:
+        warnings.warn(
+            "--disaggregate is deprecated; use --engine-mode disaggregated",
+            DeprecationWarning, stacklevel=2)
+        mode = EngineMode.DISAGGREGATED.value
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -58,18 +76,22 @@ def main() -> None:
                        temperature=args.temperature, seed=args.seed,
                        page_size=args.page_size, num_pages=args.num_pages,
                        prefix_cache=not args.no_prefix_cache,
-                       disaggregate=args.disaggregate,
-                       disagg_route=args.route)
-    engine_cls = (DisaggregatedEngine if args.disaggregate
-                  else PagedEngine if args.paged else ContinuousEngine)
-    eng = engine_cls(cfg, state["params"], scfg)
+                       disagg_route=args.route,
+                       engine_mode=mode or EngineMode.CONTINUOUS.value,
+                       num_replicas=args.replicas)
+    if (mode or "") == EngineMode.FIXED.value:
+        ap.error("--engine-mode fixed is the equal-length benchmark "
+                 "baseline (no admission plane); use "
+                 "benchmarks/serve_continuous.py to exercise it")
+    eng = make_engine(cfg, state["params"], scfg)
+    is_cluster = isinstance(eng, ServeCluster)
     sampling = SamplingParams.from_config(scfg)
 
     rng = np.random.default_rng(args.seed)
     lens = np.clip(rng.poisson(args.mean_prompt_len, args.requests), 1, 256)
     news = np.clip(rng.poisson(args.mean_new_tokens, args.requests), 1, 128)
     fe_shape = None
-    if cfg.frontend != "none":
+    if cfg.frontend != "none" and not is_cluster:
         fe_shape = (1, cfg.frontend_seq_len, cfg.frontend_dim)
 
     t0 = time.time()
@@ -80,8 +102,11 @@ def main() -> None:
               if fe_shape else None)
         while True:
             try:
-                rids.append(eng.submit(prompt, int(n), sampling,
-                                       frontend_embeds=fe))
+                if is_cluster:
+                    rids.append(eng.submit(prompt, int(n), sampling=sampling))
+                else:
+                    rids.append(eng.submit(prompt, int(n), sampling,
+                                           frontend_embeds=fe))
                 break
             except QueueFull:
                 eng.step()
@@ -89,19 +114,18 @@ def main() -> None:
     eng.executor.drain()
     dt = time.time() - t0
 
-    total_new = sum(len(eng.request(r).output) for r in rids)
-    ttfts = [eng.request(r).first_token_at - eng.request(r).submitted_at
-             for r in rids]
+    results = [eng.result(r) for r in rids]
+    total_new = sum(len(r["tokens"]) for r in results)
+    ttfts = [r["ttft_s"] for r in results]
     print(f"requests={args.requests} slots={args.max_batch} "
           f"mean_prompt={args.mean_prompt_len} mean_new={args.mean_new_tokens}")
     print(f"wall={dt:.2f}s  throughput={total_new/dt:.1f} tok/s  "
           f"mean_ttft={1e3*np.mean(ttfts):.0f}ms  stats={eng.stats()}")
-    for rid in rids[:4]:
-        out = eng.result(rid)
+    for rid, out in zip(rids[:4], results[:4]):
         print(f"  req{rid}: prompt={out['prompt_len']} "
               f"tokens={out['tokens'][:10]}{'...' if len(out['tokens']) > 10 else ''}")
-    if args.disaggregate:
-        print("prefill routing (cost-model placements):")
+    if hasattr(eng, "route_plan"):
+        print("routing (cost-model placements):")
         print(eng.route_plan().to_table())
     eng.close()
 

@@ -1,0 +1,42 @@
+"""``repro.serve`` — the serving plane, one package.
+
+Module layout (the public API):
+
+  * ``scheduler`` — ``Request`` / ``SlotTable`` / ``Scheduler`` /
+    ``QueueFull``: the host-side admission plane.
+  * ``programs``  — the four fused fixed-shape device programs (dense/paged
+    x admit/decode), cached process-wide so replicas share compilations.
+  * ``engines``   — ``ContinuousEngine`` (default, alias ``ServeEngine``),
+    ``PagedEngine`` (paged tiered KV-cache + prefix CoW), and the
+    ``FixedBatchEngine`` baseline.
+  * ``disagg``    — ``PrefillWorker`` / ``DisaggregatedEngine``: prefill and
+    decode as two endpoints with a ``KVHandoff`` blob between them.
+  * ``cluster``   — ``ServeCluster``: N decode replicas behind a cost-model
+    router with prefix affinity and per-tenant QoS (``TenantSpec``).
+  * ``factory``   — ``make_engine(cfg, params, scfg)`` keyed on
+    ``repro.config.EngineMode``.
+  * ``sampler`` / ``kvpool`` — sampling params/programs and the paged
+    KV-cache substrate (pool, cold tier, handoffs).
+
+``repro.serve.engine`` remains as a compat shim over the old single-module
+layout.
+"""
+from repro.config.run import EngineMode
+from repro.serve.cluster import ServeCluster, TenantSpec, TokenBucket
+from repro.serve.disagg import DisaggregatedEngine, PrefillWorker
+from repro.serve.engines import (
+    ContinuousEngine, FixedBatchEngine, PagedEngine, ServeEngine)
+from repro.serve.factory import make_engine, resolve_engine_mode
+from repro.serve.kvpool import KVBlockPool, KVHandoff
+from repro.serve.router import ClusterRouter
+from repro.serve.sampler import SamplingParams
+from repro.serve.scheduler import (
+    needs_exact_prefill, QueueFull, Request, Scheduler, SlotTable)
+
+__all__ = [
+    "ClusterRouter", "ContinuousEngine", "DisaggregatedEngine", "EngineMode",
+    "FixedBatchEngine", "KVBlockPool", "KVHandoff", "PagedEngine",
+    "PrefillWorker", "QueueFull", "Request", "SamplingParams", "Scheduler",
+    "ServeCluster", "ServeEngine", "SlotTable", "TenantSpec", "TokenBucket",
+    "make_engine", "needs_exact_prefill", "resolve_engine_mode",
+]

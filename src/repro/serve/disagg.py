@@ -1,0 +1,186 @@
+"""Disaggregated prefill/decode serving: two engine endpoints, one handoff.
+
+The paper's advice #3 — the off-path device is a *new endpoint in the
+network*, an independent worker, not a cache bolted onto the data path —
+realized for serving: a ``PrefillWorker`` endpoint bucket-prefills prompts
+and exports the KV pages as ``KVHandoff`` blobs; a ``DisaggregatedEngine``
+decode endpoint consumes them through a ``ShardedStore`` and splices the
+requests into its running decode batch.  ``ServeCluster``
+(``serve.cluster``) generalizes this pair to N decode replicas behind a
+cost-model router.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model import ModelConfig
+from repro.config.run import ServeConfig
+from repro.core.costmodel import Placement
+from repro.core.executor import BackgroundExecutor
+from repro.core.planner import PrefillRoutePlanner
+from repro.models.transformer import ExecPolicy
+from repro.serve.engines import PagedEngine
+from repro.serve.kvpool import KVHandoff, chain_keys, pack_handoff
+from repro.serve.sampler import SamplingParams
+from repro.serve.scheduler import Request
+
+
+class PrefillWorker(PagedEngine):
+    """The *prefill endpoint* of a disaggregated serve plane.
+
+    A full ``PagedEngine`` (own page pool, own prefix index, own cold tier)
+    that only ever runs the fused bucket-prefill/admit program: instead of
+    joining a decode batch, the freshly-computed KV pages are sliced out of
+    the pool (``read_page``), staged to host memory, and returned as a
+    transferable ``KVHandoff``.  The slot and pages are released
+    immediately — full prompt pages stay behind in the prefix index, so
+    prompts sharing a prefix are prefilled once per *endpoint*, not once per
+    request."""
+
+    def prefill_to_handoff(self, rid: int, prompt: np.ndarray,
+                           max_new_tokens: int,
+                           sampling: SamplingParams) -> Optional[KVHandoff]:
+        """Bucket-prefill ``prompt`` and export its KV pages.  Returns None
+        when this endpoint is out of pages (the caller prefills locally)."""
+        # max_new_tokens=1 on the worker request: allocate only the pages
+        # the prompt (plus the sampled first token's logical page) covers —
+        # the decode endpoint owns the decode-horizon pages.
+        req = Request(next(self._rid), np.asarray(prompt, np.int32), 1,
+                      sampling)
+        tok0 = self._admit_one(req)
+        if tok0 is None:
+            return None
+        pg = self.page_size
+        n_prompt = -(-len(req.prompt) // pg)
+        blobs = [jax.device_get(self._read_page_prog(
+                     self.states, jnp.asarray(p, jnp.int32)))
+                 for p in req.pages[:n_prompt]]
+        handoff = KVHandoff(
+            rid=rid, prompt_len=len(req.prompt),
+            max_new_tokens=max_new_tokens, first_token=tok0,
+            page_blobs=blobs, chains=chain_keys(req.prompt, pg),
+            sampling=dataclasses.asdict(req.sampling))
+        self._release_slot(req.slot)        # pages unref'd; full prompt
+        return handoff                      # pages stay prefix-cached
+
+
+class DisaggregatedEngine(PagedEngine):
+    """Prefill/decode disaggregation across two engine endpoints.
+
+    This instance is the **decode endpoint**: it owns the decode batch, the
+    decode-side page pool and the result store.  A second engine instance —
+    a ``PrefillWorker`` — is the **prefill endpoint**.  Per request, the
+    ``PrefillRoutePlanner``/``CostModel`` pair decides (prompt length vs.
+    handoff link cost, scaled by decode batch pressure) whether to:
+
+      * **route remote** — the prefill endpoint bucket-prefills the prompt
+        and publishes the KV pages + first token + sampling state as a
+        ``KVHandoff`` blob through a ``ShardedStore`` hash-sharded by
+        request id over peer endpoints (dicts in-process,
+        ``BlobEndpoint``-wrapped ``PeerEndpoint`` directories across hosts);
+        the decode endpoint consumes the blob, faults the pages into its own
+        ``KVBlockPool`` (deduping against its prefix index first) and joins
+        the request into the running decode batch — no prefill program ever
+        steals a decode step here; or
+      * **prefill locally** — short prompts lose to the link latency floor
+        and take the ordinary ``PagedEngine`` admit path.
+
+    Every decision lands in an ``OffloadPlan`` (``route_plan().to_table()``)
+    so the serve plane's placement rationale stays as explainable as the
+    training plane's.  On this container both endpoints live in one
+    process; the handoff blob is the deliberately narrow interface, exactly
+    how ``core.endpoint`` abstracts peers.  The handoff *import* half lives
+    on ``PagedEngine`` itself (``_import_handoff``), so cluster replicas
+    consume the same blobs without being this class."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 policy: ExecPolicy = ExecPolicy(),
+                 executor: Optional[BackgroundExecutor] = None,
+                 result_endpoints: Optional[Sequence[Any]] = None,
+                 handoff_endpoints: Optional[Sequence[Any]] = None,
+                 profile: Optional[Any] = None):
+        endpoints = (list(handoff_endpoints)
+                     if handoff_endpoints is not None
+                     else [dict() for _ in range(max(1, scfg.handoff_shards))])
+        super().__init__(cfg, params, scfg, policy, executor,
+                         result_endpoints, handoff_endpoints=endpoints)
+        pre_scfg = dataclasses.replace(
+            scfg, max_batch=max(1, scfg.prefill_slots),
+            num_pages=scfg.prefill_pages, disaggregate=False)
+        self.prefill = PrefillWorker(cfg, params, pre_scfg, policy,
+                                     executor=self.executor)
+        n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+        self.router = PrefillRoutePlanner(flops_per_token=2.0 * n_params,
+                                          profile=profile)
+        # Decode-side bytes one handoff page carries (the link-cost input).
+        self._page_bytes = self.cache_bytes() / max(1, self.pool.num_pages)
+        self.prefill_seconds = 0.0      # time spent on the other endpoint
+        # rid -> routing decision, so a deferred admission retries with the
+        # same placement instead of re-deciding (and re-counting) each
+        # attempt; entries clear once the request is actually admitted.
+        self._route_cache: Dict[int, bool] = {}
+
+    # -- routing ---------------------------------------------------------------
+    def _route_remote(self, req: Request) -> bool:
+        mode = self.scfg.disagg_route
+        if mode in ("remote", "local"):
+            self.router.note_forced(req.rid, mode == "remote",
+                                    f"disagg_route={mode!r}")
+            return mode == "remote"
+        n_pages = -(-len(req.prompt) // self.page_size)
+        d = self.router.route(req.rid, len(req.prompt),
+                              n_pages * self._page_bytes,
+                              len(self.slots.active()), self.scfg.max_batch)
+        return d.placement == Placement.SIDECAR_ASYNC
+
+    def route_plan(self):
+        """The accumulated per-request routing decisions as an
+        ``OffloadPlan`` — ``.to_table()`` is the explainability exhibit."""
+        return self.router.plan()
+
+    # -- admission -------------------------------------------------------------
+    def _admit_one(self, req: Request) -> Optional[int]:
+        key = self._handoff_key(req.rid)
+        if not self.handoff_store.contains(key):    # deferred import retries
+            remote = self._route_cache.get(req.rid)  # skip the publish half
+            if remote is None:
+                remote = self._route_remote(req)
+                self._route_cache[req.rid] = remote
+            if remote:
+                t0 = time.perf_counter()
+                handoff = self.prefill.prefill_to_handoff(
+                    req.rid, req.prompt, req.max_new_tokens, req.sampling)
+                self.prefill_seconds += time.perf_counter() - t0
+                if handoff is not None:
+                    # Publish-then-consume through the store on purpose,
+                    # even though both endpoints share this process: the
+                    # blob crossing the ShardedStore/BlobEndpoint boundary
+                    # *is* the endpoint interface, and keeping it on the
+                    # path keeps the reported decode-side cost honest about
+                    # the link.
+                    self.handoff_store.put(key, pack_handoff(handoff))
+                # else: prefill endpoint out of pages — degrade this
+                # attempt to a local prefill via the base admit path.
+        tok0 = super()._admit_one(req)      # import the blob, or local admit
+        if tok0 is not None:
+            self._route_cache.pop(req.rid, None)
+        return tok0
+
+    # -- introspection / lifecycle ---------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        s = super().stats()
+        s["prefill_endpoint"] = {
+            "pool": self.prefill.pool.stats(),
+            "busy_s": round(self.prefill_seconds, 4),
+        }
+        return s
+
+    def close(self) -> None:
+        self.prefill.close()
+        super().close()

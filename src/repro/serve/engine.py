@@ -1,1166 +1,30 @@
-"""Continuous-batching serve engine: sidecar admission plane + fixed fast path.
+"""Backwards-compat shim: ``repro.serve.engine`` used to be one 1100-line
+module holding every serve class.  It is now a package —
 
-The split follows the paper's doctrine directly:
+  * ``repro.serve.scheduler`` — Request / SlotTable / Scheduler (host plane)
+  * ``repro.serve.programs``  — the four fused device-program builders
+  * ``repro.serve.engines``   — Continuous / Paged / FixedBatch engines
+  * ``repro.serve.disagg``    — PrefillWorker / DisaggregatedEngine
+  * ``repro.serve.cluster``   — ServeCluster (multi-replica, QoS)
+  * ``repro.serve.factory``   — EngineMode-driven ``make_engine``
 
-  * **Fast path (device)** — exactly three fixed-shape jitted programs: bucket
-    prefill (batch 1, one trace per bucket length), batched decode (always
-    ``max_batch`` wide), and slot insertion.  The device never sees a dynamic
-    shape, so heterogeneous traffic costs no recompiles.
-  * **Admission plane (host, G2)** — a bounded FIFO ``Scheduler`` plus a
-    ``SlotTable``: between decode steps, finished requests are evicted
-    (per-request EOS / max-token), freed slots are recycled, and queued
-    requests are prefilled solo and spliced into the running batch
-    (``insert_decode_slot``) — new arrivals join mid-decode instead of
-    waiting for a full batch to drain.
-  * **Bookkeeping (sidecar, G2)** — latency records, token accounting and
-    periodic engine stats go through ``BackgroundExecutor``; the step loop
-    never blocks on them.
-  * **Results (G3)** — completed generations land in a ``ShardedStore``
-    hash-sharded over peer endpoints, the paper's Redis-slot scheme.
-
-``FixedBatchEngine`` keeps the old drain-the-whole-batch behavior as the
-benchmark baseline (``benchmarks/serve_continuous.py``).
+— and this module re-exports the old names so existing imports
+(``from repro.serve.engine import ContinuousEngine``) keep working.
+Prefer importing from ``repro.serve`` directly in new code.
 """
-from __future__ import annotations
-
-import dataclasses
-import functools
-import heapq
-import itertools
-import threading
-import time
-from collections import deque
-from typing import Any, Dict, List, Optional, Sequence, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.config.model import (
-    MIX_ATTN_LOCAL, MIX_RGLRU, MIX_RWKV6, ModelConfig)
-from repro.config.run import ServeConfig
-from repro.core.costmodel import Placement
-from repro.core.endpoint import ShardedStore
-from repro.core.executor import BackgroundExecutor
-from repro.core.planner import PrefillRoutePlanner
-from repro.models.transformer import (
-    ExecPolicy, init_decode_state, init_paged_decode_state,
-    insert_decode_slot, read_page, scatter_solo_pages, supports_paging,
-    write_page)
-from repro.serve.kvpool import (
-    SCRATCH_PAGE, ColdTier, KVBlockPool, KVHandoff, chain_keys, pack_handoff,
-    unpack_handoff)
-from repro.serve.sampler import SamplingParams, sample, sample_slots
-from repro.train.steps import (
-    make_bucket_prefill_step, make_decode_step, make_paged_decode_step,
-    make_paged_prefill_step, make_prefill_step)
-
-
-class QueueFull(RuntimeError):
-    """Raised on submit when the bounded admission queue is at capacity."""
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int
-    sampling: SamplingParams = SamplingParams()
-    frontend_embeds: Optional[np.ndarray] = None   # (1, M, F)
-    submitted_at: float = dataclasses.field(default_factory=time.time)
-    first_token_at: float = 0.0
-    finished_at: float = 0.0
-    slot: int = -1
-    output: List[int] = dataclasses.field(default_factory=list)
-    pages: List[int] = dataclasses.field(default_factory=list)  # paged engine
-    prefix_hit_tokens: int = 0
-
-    @property
-    def done(self) -> bool:
-        return self.finished_at > 0.0
-
-
-class SlotTable:
-    """Fixed-width slot bookkeeping for the decode batch.
-
-    Admission always takes the *lowest* free index and eviction returns it,
-    so slot assignment is deterministic — the admission/eviction ordering
-    tests pin this down.
-    """
-
-    def __init__(self, width: int):
-        self.width = width
-        self._req: List[Optional[Request]] = [None] * width
-        self._free: List[int] = list(range(width))
-        heapq.heapify(self._free)
-
-    def free_count(self) -> int:
-        return len(self._free)
-
-    def acquire(self, req: Request) -> int:
-        slot = heapq.heappop(self._free)
-        self._req[slot] = req
-        req.slot = slot
-        return slot
-
-    def release(self, slot: int) -> None:
-        assert self._req[slot] is not None, f"slot {slot} already free"
-        self._req[slot] = None
-        heapq.heappush(self._free, slot)
-
-    def get(self, slot: int) -> Optional[Request]:
-        return self._req[slot]
-
-    def active(self) -> List[Request]:
-        return [r for r in self._req if r is not None]
-
-
-def needs_exact_prefill(cfg: ModelConfig) -> bool:
-    """Archs whose decode state a right-padded prefill would pollute.
-
-    Recurrent mixers fold every (pad) token into O(1) state, and SWA ring
-    caches can be fully overwritten by pads; global-attention caches only
-    need the pads' entries invalidated, which the bucket prefill does.
-
-    Tradeoff: exact-prefill archs ignore ``prefill_buckets`` and retrace the
-    admit program once per *distinct prompt length* (a compile stall on each
-    new length, and an unbounded trace cache on a long-lived server).
-    Callers serving such archs should quantize prompt lengths themselves, or
-    accept the compile cost.
-    """
-    return (any(k in (MIX_RGLRU, MIX_RWKV6, MIX_ATTN_LOCAL)
-                for k in cfg.pattern)
-            or cfg.mlp_kind == "rwkv_cmix")
-
-
-class Scheduler:
-    """Host-side admission queue: bounded FIFO + prefill length bucketing."""
-
-    def __init__(self, scfg: ServeConfig, exact_buckets: bool = False):
-        self.max_queue = scfg.max_queue
-        self.buckets = tuple(sorted(scfg.prefill_buckets))
-        self.exact = exact_buckets
-        self.capacity = scfg.max_seq_len
-        self._dq: "deque[Request]" = deque()
-
-    def push(self, req: Request) -> None:
-        if len(self._dq) >= self.max_queue:
-            raise QueueFull(
-                f"admission queue full ({self.max_queue}); retry after step()")
-        self._dq.append(req)
-
-    def push_front(self, req: Request) -> None:
-        """Requeue at the head (admission deferred on resource shortage);
-        deliberately exempt from the max_queue bound — the request was
-        already admitted to the queue once."""
-        self._dq.appendleft(req)
-
-    def pop(self) -> Request:
-        return self._dq.popleft()
-
-    def depth(self) -> int:
-        return len(self._dq)
-
-    def empty(self) -> bool:
-        return not self._dq
-
-    def bucket_for(self, length: int) -> int:
-        """Bucketed prefill length, clamped to the decode-state capacity.
-
-        The clamp lives here (not at call sites) so *every* caller gets
-        buckets that cannot ring-wrap the prefill: a bucket larger than
-        capacity would silently drop the head of the prompt's cache.
-        """
-        b = length
-        if not self.exact:
-            for cand in self.buckets:
-                if cand >= length:
-                    b = cand
-                    break
-        return max(min(b, self.capacity), length, 1)
-
-
-def _make_admit_program(cfg: ModelConfig, policy: ExecPolicy, capacity: int):
-    """One fused device program per admission: init a fresh solo state,
-    bucket-prefill the prompt, sample the first token, splice the state into
-    the running batch at ``slot``, and update the device-resident per-slot
-    mirrors (token / position / sampling params).  One dispatch per
-    admission is what lets tiny-step serving amortize host overhead (the G2
-    fast-path rule)."""
-    prefill = make_bucket_prefill_step(cfg, policy)
-
-    def admit(params, states, batch, slot, key, mirrors):
-        solo = init_decode_state(cfg, 1, capacity)
-        solo, last_logits = prefill(params, solo, batch)
-        tok, key = sample_slots(last_logits, key, batch["temp"][None],
-                                batch["top_k"][None], batch["top_p"][None])
-        states = insert_decode_slot(states, solo, slot)
-        mirrors = {
-            "tok": mirrors["tok"].at[slot].set(tok[0]),
-            "pos": mirrors["pos"].at[slot].set(batch["length"]),
-            "temp": mirrors["temp"].at[slot].set(batch["temp"]),
-            "top_k": mirrors["top_k"].at[slot].set(batch["top_k"]),
-            "top_p": mirrors["top_p"].at[slot].set(batch["top_p"]),
-        }
-        return states, tok, key, mirrors
-    return admit
-
-
-def _make_decode_program(cfg: ModelConfig, policy: ExecPolicy):
-    """One fused device program per serve step: batched decode + per-slot
-    sampling + key split.  Tokens and positions live in the device-resident
-    ``mirrors``, so the steady-state loop transfers nothing host->device."""
-    decode = make_decode_step(cfg, policy)
-
-    def step(params, states, key, mirrors):
-        batch = {"tokens": mirrors["tok"][:, None],
-                 "positions": mirrors["pos"][:, None]}
-        states, logits = decode(params, states, batch)
-        toks, key = sample_slots(logits, key, mirrors["temp"],
-                                 mirrors["top_k"], mirrors["top_p"])  # (B,)
-        mirrors = dict(mirrors, tok=toks, pos=mirrors["pos"] + 1)
-        return states, toks, key, mirrors
-    return step
-
-
-def _make_paged_admit_program(cfg: ModelConfig, policy: ExecPolicy,
-                              capacity: int):
-    """Paged admission, one fused dispatch: gather the reused prefix pages
-    into a solo dense cache, prefill only the suffix bucket, sample the first
-    token, scatter the new pages into the pool, update the slot mirrors.
-    Prefix-hit pages are mapped to the scratch page in ``assign`` so shared
-    (copy-on-write) pages are never rewritten."""
-    prefill = make_paged_prefill_step(cfg, capacity, policy)
-
-    def admit(params, pstate, batch, key, mirrors):
-        solo, last_logits = prefill(params, pstate, batch)
-        tok, key = sample_slots(last_logits, key, batch["temp"][None],
-                                batch["top_k"][None], batch["top_p"][None])
-        pstate = scatter_solo_pages(pstate, solo, batch["assign"])
-        slot = batch["slot"]
-        mirrors = {
-            "tok": mirrors["tok"].at[slot].set(tok[0]),
-            "pos": mirrors["pos"].at[slot].set(batch["length"]),
-            "temp": mirrors["temp"].at[slot].set(batch["temp"]),
-            "top_k": mirrors["top_k"].at[slot].set(batch["top_k"]),
-            "top_p": mirrors["top_p"].at[slot].set(batch["top_p"]),
-        }
-        return pstate, tok, key, mirrors
-    return admit
-
-
-def _make_paged_decode_program(cfg: ModelConfig, policy: ExecPolicy):
-    """Batched decode through the block table: K/V reads and the new token's
-    write are routed to physical pool pages.  The table rides host->device
-    each step (a few KB — the admission plane owns the page map, the fast
-    path just consumes it)."""
-    decode = make_paged_decode_step(cfg, policy)
-
-    def step(params, pstate, key, mirrors, table):
-        batch = {"tokens": mirrors["tok"][:, None],
-                 "positions": mirrors["pos"][:, None]}
-        pstate, logits = decode(params, pstate, batch, table)
-        toks, key = sample_slots(logits, key, mirrors["temp"],
-                                 mirrors["top_k"], mirrors["top_p"])
-        mirrors = dict(mirrors, tok=toks, pos=mirrors["pos"] + 1)
-        return pstate, toks, key, mirrors
-    return step
-
-
-class ContinuousEngine:
-    """Continuous-batching engine; see module docstring for the G2/G3 split."""
-
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 policy: ExecPolicy = ExecPolicy(),
-                 executor: Optional[BackgroundExecutor] = None,
-                 result_endpoints: Optional[Sequence[Any]] = None):
-        self.cfg, self.scfg = cfg, scfg
-        self.params = params
-        self.policy = policy
-        self._key = jax.random.PRNGKey(scfg.seed)
-
-        B = scfg.max_batch
-        self.slots = SlotTable(B)
-        self.scheduler = Scheduler(scfg, exact_buckets=needs_exact_prefill(cfg))
-        # Per-slot mirrors live on device (see _make_decode_program); the
-        # host only keeps what its eviction logic reads.
-        self._mirrors = {
-            "tok": jnp.zeros(B, jnp.int32),
-            "pos": jnp.zeros(B, jnp.int32),
-            "temp": jnp.zeros(B, jnp.float32),
-            "top_k": jnp.zeros(B, jnp.int32),
-            "top_p": jnp.ones(B, jnp.float32),
-        }
-        self._eos = np.full(B, -1, np.int32)
-        self._host_temps = np.zeros(B, np.float32)
-        self._build_device_plane()
-
-        # Sidecar plane (G2) + sharded result store (G3).
-        self._own_executor = executor is None
-        self.executor = executor or BackgroundExecutor(
-            num_threads=2, max_inflight=8, backpressure="block")
-        endpoints = (list(result_endpoints) if result_endpoints is not None
-                     else [dict() for _ in range(max(1, scfg.result_shards))])
-        self.store = ShardedStore(endpoints)
-        # slot->endpoint ownership is static; compute the balance once so
-        # stats() stays O(1) on the decode loop
-        self._shard_balance = self.store.balance()
-        self.records: List[Dict[str, Any]] = []
-        self.stats_log: List[Dict[str, Any]] = []
-        # One lock covers everything mutated by the engine loop and read from
-        # other threads (records, stats_log, step/token counters): stats()
-        # and result() may legally race the loop thread.
-        self._lock = threading.Lock()
-
-        self._rid = itertools.count()
-        self._requests: Dict[int, Request] = {}
-        self._steps = 0
-        self._tokens_out = 0
-        self._closed = False
-        self._loop_error: Optional[BaseException] = None
-        # Serializes the step loop against close()/failure teardown: a
-        # close() racing a mid-flight step must not release slots the loop
-        # is still decoding (RLock: the step exception path re-enters via
-        # _fail_pending).  submit() deliberately does NOT take it — a
-        # producer must never stall behind a device step — so queue
-        # admission vs. teardown atomicity gets its own small lock.
-        self._lifecycle = threading.RLock()
-        self._admission = threading.Lock()
-
-    def _build_device_plane(self) -> None:
-        """Fast path: two fixed-shape fused programs (admit retraces once per
-        bucket length; decode is a single trace).  Donations keep the batch
-        state and per-slot mirrors updated in place.  ``PagedEngine``
-        overrides this with block-table programs over a shared page pool."""
-        cfg, scfg = self.cfg, self.scfg
-        self._admit_prog = jax.jit(
-            _make_admit_program(cfg, self.policy, scfg.max_seq_len),
-            donate_argnums=(1, 5))
-        self._decode_prog = jax.jit(_make_decode_program(cfg, self.policy),
-                                    donate_argnums=(1, 3))
-        self.states = init_decode_state(cfg, scfg.max_batch,
-                                        capacity=scfg.max_seq_len)
-
-    # -- request lifecycle ----------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int,
-               sampling: Optional[SamplingParams] = None,
-               frontend_embeds: Optional[np.ndarray] = None) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        if prompt.ndim != 1 or prompt.size == 0:
-            raise ValueError("prompt must be a non-empty 1-D token array")
-        # Validate the budget *before* using it in the length arithmetic:
-        # an invalid budget must get the budget error, not a misleading
-        # max_seq_len complaint (or none at all, for large negatives).
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
-        if len(prompt) + max_new_tokens > self.scfg.max_seq_len:
-            raise ValueError(
-                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
-                f"exceeds max_seq_len ({self.scfg.max_seq_len})")
-        req = Request(next(self._rid), prompt, max_new_tokens,
-                      sampling or SamplingParams.from_config(self.scfg),
-                      frontend_embeds=frontend_embeds)
-        # Atomic against _fail_pending's teardown so a request can never
-        # slip into the queue after close() already failed everything.
-        with self._admission:
-            if self._closed:
-                raise RuntimeError("engine is closed; no new submissions")
-            self.scheduler.push(req)      # raises QueueFull at capacity
-            self._requests[req.rid] = req
-        return req.rid
-
-    def _admit(self) -> int:
-        """Fill free slots from the queue: solo bucket prefill, sample the
-        first token, splice the state into the running batch."""
-        admitted = 0
-        while self.slots.free_count() and not self.scheduler.empty():
-            req = self.scheduler.pop()
-            tok0 = self._admit_one(req)
-            if tok0 is None:            # resource shortage (paged engine):
-                self.scheduler.push_front(req)   # retry after evictions free
-                break                            # pages on later steps
-            sp = req.sampling
-            slot = req.slot
-            req.first_token_at = time.time()
-            req.output.append(tok0)
-            admitted += 1
-            self._eos[slot] = sp.eos_id
-            self._host_temps[slot] = sp.temperature
-            if (sp.eos_id >= 0 and tok0 == sp.eos_id) \
-                    or req.max_new_tokens <= 1:
-                self._release_slot(slot)  # finished during admission
-                self._finish(req)
-        return admitted
-
-    def _admit_one(self, req: Request) -> Optional[int]:
-        """Acquire a slot and run the fused admit program for one request.
-        Returns the first sampled token, or None if admission must wait."""
-        L = len(req.prompt)
-        # bucket_for clamps to capacity: an over-capacity bucket would
-        # ring-wrap the prefill and drop the head of the prompt's cache.
-        S = self.scheduler.bucket_for(L)
-        toks = np.zeros((1, S), np.int32)
-        toks[0, :L] = req.prompt
-        positions = np.arange(S, dtype=np.int32)[None, :]
-        sp = req.sampling
-        batch = {"tokens": jnp.asarray(toks),
-                 "positions": jnp.asarray(positions),
-                 "length": jnp.asarray(L, jnp.int32),
-                 "temp": jnp.asarray(sp.temperature, jnp.float32),
-                 "top_k": jnp.asarray(sp.top_k, jnp.int32),
-                 "top_p": jnp.asarray(sp.top_p, jnp.float32)}
-        if req.frontend_embeds is not None:
-            batch["frontend_embeds"] = jnp.asarray(req.frontend_embeds)
-        slot = self.slots.acquire(req)
-        self.states, tok, self._key, self._mirrors = self._admit_prog(
-            self.params, self.states, batch,
-            jnp.asarray(slot, jnp.int32), self._key, self._mirrors)
-        return int(tok[0])
-
-    def _release_slot(self, slot: int) -> None:
-        self.slots.release(slot)
-        # Zero the freed slot's device temperature so an all-greedy batch
-        # regains the cheap argmax sampling path (a stale temp > 0 would
-        # force the stochastic branch on every later step).
-        if self._host_temps[slot] > 0.0:
-            self._host_temps[slot] = 0.0
-            self._mirrors = dict(self._mirrors,
-                                 temp=jnp.asarray(self._host_temps))
-
-    def _decode_device(self) -> np.ndarray:
-        """Run the fused decode program; returns the (B,) sampled tokens."""
-        self.states, toks_dev, self._key, self._mirrors = self._decode_prog(
-            self.params, self.states, self._key, self._mirrors)
-        return np.asarray(toks_dev)
-
-    def _decode_once(self) -> bool:
-        """One batched decode step over all slots + per-slot evictions."""
-        active = self.slots.active()
-        if not active:
-            return False
-        toks = self._decode_device()
-        for req in active:
-            slot = req.slot
-            tok = int(toks[slot])
-            req.output.append(tok)
-            with self._lock:
-                self._tokens_out += 1
-            if (self._eos[slot] >= 0 and tok == self._eos[slot]) \
-                    or len(req.output) >= req.max_new_tokens:
-                self._release_slot(slot)
-                self._finish(req)
-        with self._lock:
-            self._steps += 1
-            steps = self._steps
-        if self.scfg.stats_every and steps % self.scfg.stats_every == 0:
-            snap = self.stats()
-            self.executor.submit("serve.stats", self._append_stats, snap)
-        return True
-
-    def _append_stats(self, snap: Dict[str, Any]) -> None:
-        with self._lock:
-            self.stats_log.append(snap)
-
-    def step(self) -> bool:
-        """Admit + one decode step.  Returns False once fully idle.
-
-        An exception out of the decode loop is terminal for every in-flight
-        request: it is recorded (so ``result()`` surfaces it instead of
-        reporting the request as forever "still decoding") and every
-        pending request gets a terminal error record before re-raising."""
-        with self._lifecycle:
-            if self._closed:
-                return False
-            try:
-                admitted = self._admit()
-                return self._decode_once() or admitted > 0
-            except Exception as e:
-                self._loop_error = e
-                self._fail_pending(
-                    f"decode loop died: {type(e).__name__}: {e}")
-                raise
-
-    def run(self) -> None:
-        """Drive until queue and slots are empty (the serve loop)."""
-        while self.step():
-            pass
-
-    def _finish(self, req: Request) -> None:
-        done_at = time.time()
-        payload = {
-            "rid": req.rid,
-            "tokens": list(req.output),
-            "prompt_len": int(len(req.prompt)),
-            "ttft_s": req.first_token_at - req.submitted_at,
-            "e2e_s": done_at - req.submitted_at,
-        }
-        # Latency-insensitive bookkeeping rides the sidecar (G2): the store
-        # write + latency record never block the decode loop.  Submit BEFORE
-        # marking the request done: a concurrent result(rid, wait=True) that
-        # observes req.done must find the record covered by its drain()
-        # (submitting after would open a done-but-not-yet-recorded window).
-        self.executor.submit(f"serve.record/{req.rid}", self._record, payload)
-        req.finished_at = done_at
-
-    def _record(self, payload: Dict[str, Any]) -> None:
-        self.store.put(f"req/{payload['rid']}", payload)
-        with self._lock:
-            self.records.append(payload)
-
-    def _fail_pending(self, reason: str) -> None:
-        """Terminate every unfinished request with an error record.
-
-        Runs on close() and on decode-loop death so a ``result(wait=True)``
-        waiter always finds a terminal record instead of waiting on a
-        request that can no longer finish.  Records are written
-        synchronously — this path is not latency-sensitive and must not
-        depend on the sidecar still being alive.  Holds the admission lock
-        so no submit() can enqueue between the sweep and the queue drain."""
-        with self._admission:
-            pending = [r for r in self._requests.values() if not r.done]
-            for req in pending:
-                if req.slot >= 0 and self.slots.get(req.slot) is req:
-                    self._release_slot(req.slot)
-                done_at = time.time()
-                self._record({
-                    "rid": req.rid,
-                    "tokens": list(req.output),
-                    "prompt_len": int(len(req.prompt)),
-                    "ttft_s": (req.first_token_at - req.submitted_at
-                               if req.first_token_at else 0.0),
-                    "e2e_s": done_at - req.submitted_at,
-                    "error": reason,
-                })
-                req.finished_at = done_at
-            while not self.scheduler.empty():
-                self.scheduler.pop()
-
-    # -- results / introspection ----------------------------------------------
-    def result(self, rid: int, wait: bool = True) -> Dict[str, Any]:
-        """Fetch a completed generation from the sharded result store.
-
-        A request the engine can no longer finish is still terminal:
-        ``close()`` and decode-loop death write error records for every
-        pending request, so this returns a payload with an ``"error"`` key
-        instead of hanging the waiter; a decode-loop exception re-raises
-        here with the original as cause."""
-        if wait and not self.executor.drain():
-            raise TimeoutError(
-                f"sidecar drain timed out before req/{rid} was recorded")
-        req = self._requests.get(rid)
-        if req is not None and not req.done:
-            if self._loop_error is not None:
-                raise RuntimeError(
-                    f"request {rid} cannot complete: the decode loop died"
-                ) from self._loop_error
-            raise RuntimeError(
-                f"request {rid} is still queued/decoding; drive step()/run() "
-                "to completion before fetching its result")
-        return self.store.get(f"req/{rid}")
-
-    def request(self, rid: int) -> Request:
-        return self._requests[rid]
-
-    def stats(self) -> Dict[str, Any]:
-        # Counters are mutated by the engine loop thread; snapshot them under
-        # the lock so a concurrent reader never sees a torn update.
-        with self._lock:
-            steps, tokens = self._steps, self._tokens_out
-        return {
-            "steps": steps,
-            "tokens_out": tokens,
-            "active": len(self.slots.active()),
-            "queued": self.scheduler.depth(),
-            "free_slots": self.slots.free_count(),
-            "result_shards": self._shard_balance,
-        }
-
-    def cache_bytes(self) -> int:
-        """Resident KV-cache bytes (dense per-slot buffers or paged pools) —
-        the benchmark's fixed-memory axis."""
-        total = 0
-
-        def visit(path, leaf):
-            nonlocal total
-            last = path[-1]
-            if (isinstance(last, jax.tree_util.DictKey)
-                    and last.key in ("k", "v", "kp", "vp")):
-                total += leaf.nbytes
-            return leaf
-        jax.tree_util.tree_map_with_path(visit, self.states)
-        return total
-
-    def close(self) -> None:
-        """Shut down: fail whatever is still pending (queued or mid-decode)
-        with terminal records so concurrent ``result(wait=True)`` callers
-        wake with an error payload instead of hanging, then drain the
-        sidecar."""
-        with self._lifecycle:       # wait out any in-flight step first
-            if not self._closed:
-                self._closed = True
-                self._fail_pending("engine closed before completion")
-        self.executor.drain()
-        if self._own_executor:
-            self.executor.shutdown(drain=False)
-
-    # -- batch convenience (old ServeEngine.generate API) ----------------------
-    def generate(self, prompts: List[np.ndarray], max_new_tokens: int,
-                 frontend_embeds: Optional[np.ndarray] = None
-                 ) -> Dict[int, Request]:
-        """Submit a list of prompts and drive to completion.  Returns
-        {index -> Request}, matching the old fixed-batch engine's API."""
-        out: Dict[int, Request] = {}
-        for i, p in enumerate(prompts):
-            fe = (np.asarray(frontend_embeds[i:i + 1])
-                  if frontend_embeds is not None else None)
-            while True:
-                try:
-                    rid = self.submit(p, max_new_tokens, frontend_embeds=fe)
-                    break
-                except QueueFull:
-                    self.step()           # make room: drain one decode step
-            out[i] = self._requests[rid]
-        self.run()
-        self.executor.drain()
-        return out
-
-
-# The continuous engine is the default serving entry point.
-ServeEngine = ContinuousEngine
-
-
-class PagedEngine(ContinuousEngine):
-    """Continuous batching over a paged, tiered KV-cache.
-
-    The dense engine allocates ``max_batch x max_seq_len`` cache rows up
-    front — worst-case memory per slot, no sharing, nothing ever cools.
-    This engine replaces that with the paper's endpoint-expansion plane:
-
-      * **Pages** — each attention layer holds one physical page pool
-        (``init_paged_decode_state``); a host-side block table maps each
-        slot's logical pages to pool pages, so resident memory follows the
-        *live token count*, not ``slots x max_seq_len``.
-      * **Prefix reuse (CoW)** — full prompt pages are indexed by rolling
-        content hash (``serve.kvpool``); a request whose prompt shares a
-        prefix refs the same physical pages and prefills only its suffix.
-        Shared pages are read-only by construction (decode appends into
-        privately-owned pages), so copy-on-write never actually copies.
-      * **Tiered memory** — pages of reusable prefixes that lose the LRU
-        race under pool pressure are spilled to a host-endpoint ``ColdTier``
-        through the ``BackgroundExecutor`` sidecar (advice #2: management
-        off the critical path) and faulted back on the next prefix hit
-        (advice #3: the DPU/host as a second memory endpoint).
-
-    Global-attention decoder-only archs only; recurrent/SWA archs keep the
-    dense exact-prefill engine (``supports_paging``).
-    """
-
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 policy: ExecPolicy = ExecPolicy(),
-                 executor: Optional[BackgroundExecutor] = None,
-                 result_endpoints: Optional[Sequence[Any]] = None):
-        if not supports_paging(cfg):
-            raise ValueError(
-                f"{cfg.arch_id}: PagedEngine needs an all-global-attention "
-                "decoder-only arch; use ContinuousEngine")
-        if scfg.max_seq_len % scfg.page_size:
-            raise ValueError(f"max_seq_len ({scfg.max_seq_len}) must be a "
-                             f"multiple of page_size ({scfg.page_size})")
-        self.page_size = scfg.page_size
-        self.pages_per_seq = scfg.max_seq_len // scfg.page_size
-        num_pages = scfg.num_pages or (scfg.max_batch * self.pages_per_seq + 1)
-        if num_pages < self.pages_per_seq + 1:
-            raise ValueError(
-                f"num_pages ({num_pages}) must cover one full sequence "
-                f"({self.pages_per_seq}) plus the scratch page")
-        self.pool = KVBlockPool(num_pages, scfg.page_size,
-                                prefix_cache=scfg.prefix_cache)
-        self.cold = ColdTier(scfg.cold_pages) if scfg.cold_pages > 0 else None
-        self._table = np.full((scfg.max_batch, self.pages_per_seq),
-                              SCRATCH_PAGE, np.int32)
-        self._prompt_tokens = 0
-        self._hit_tokens = 0
-        super().__init__(cfg, params, scfg, policy, executor,
-                         result_endpoints)
-
-    def _build_device_plane(self) -> None:
-        cfg, scfg = self.cfg, self.scfg
-        self._admit_prog = jax.jit(
-            _make_paged_admit_program(cfg, self.policy, scfg.max_seq_len),
-            donate_argnums=(1, 4))
-        self._decode_prog = jax.jit(
-            _make_paged_decode_program(cfg, self.policy),
-            donate_argnums=(1, 3))
-        # Page movers for the tiered plane: slice a page out for spilling
-        # (fresh buffers, safe to stage on the sidecar) / write a faulted
-        # page back in place.
-        self._read_page_prog = jax.jit(read_page)
-        self._write_page_prog = jax.jit(write_page, donate_argnums=(0,))
-        self.states = init_paged_decode_state(cfg, self.pool.num_pages,
-                                              self.page_size)
-
-    # -- tiered-memory plane ---------------------------------------------------
-    def _spill(self, page: int, chain: bytes) -> None:
-        """Evict a cached prefix page: slice its K/V out of every pool into
-        the cold tier, then let the sidecar stage the slices to host memory
-        (``ColdTier.replace``).  The slice is enqueued on the device stream
-        *before* any later program can reuse the page, so the handoff is
-        race-free; the decode loop never blocks on the device->host copy
-        (advice #2), and a failed/dropped staging task just leaves the
-        device slices in place — never a dangling entry."""
-        if self.cold is None:
-            return
-        blob = self._read_page_prog(self.states, jnp.asarray(page, jnp.int32))
-        self.cold.put(chain, blob)
-        leaves, treedef = jax.tree.flatten(blob)
-        self.executor.submit(
-            f"kv.spill/{chain.hex()[:8]}",
-            functools.partial(self._cold_stage, chain, treedef), *leaves)
-
-    def _cold_stage(self, chain: bytes, treedef, *host_leaves) -> None:
-        # Runs on the sidecar after jax.device_get of every leaf: the cold
-        # entry becomes true host-endpoint memory.
-        self.cold.replace(chain, jax.tree.unflatten(treedef, list(host_leaves)))
-
-    def _fault_in(self, chain: bytes) -> Optional[int]:
-        """Bring a cold prefix page back into the pool.  Returns the hot
-        page (ref'd for the caller) or None on a miss / full pool."""
-        if self.cold is None or not self.cold.contains(chain):
-            return None
-        blob = self.cold.take(chain)
-        if blob is None:
-            return None
-        got = self.pool.alloc(1, evict_cb=self._spill)
-        if got is None:
-            self.cold.put(chain, blob)          # no room: stay cold
-            return None
-        page = got[0]
-        self.states = self._write_page_prog(
-            self.states, jnp.asarray(page, jnp.int32), blob)
-        self.pool.register(chain, page)
-        self.pool.faults += 1
-        return page
-
-    # -- admission -------------------------------------------------------------
-    def _match_prefix(self, req: Request,
-                      chains: List[bytes]) -> List[int]:
-        """Longest chain of *full* prompt pages already resident (hot hit)
-        or spilled (cold fault-in).  Always leaves >= 1 token to prefill so
-        the admit program has a real last-token logit to sample from."""
-        pg = self.page_size
-        limit = (len(req.prompt) - 1) // pg
-        pages: List[int] = []
-        for chain in chains[:limit]:
-            page = self.pool.lookup(chain)
-            if page is not None:
-                self.pool.ref(page)
-                pages.append(page)
-                continue
-            page = self._fault_in(chain)        # alloc() already ref'd it
-            if page is None:
-                break
-            pages.append(page)
-        return pages
-
-    def _register_prefix(self, req: Request, chains: List[bytes],
-                         pages: List[int], n_hit: int) -> None:
-        """Index the freshly-prefilled full prompt pages for future sharing."""
-        for i in range(n_hit, len(req.prompt) // self.page_size):
-            self.pool.register(chains[i], pages[i])
-
-    def _reserve_pages(self, req: Request, chains: List[bytes],
-                       need: int) -> Optional[Tuple[List[int], int]]:
-        """Shared admission half: prefix-match (hot hit or cold fault-in),
-        allocate the remainder, update hit accounting.  Returns
-        ``(pages, n_hit)``, or None when admission must defer — hit refs are
-        rolled back so decode can free pages in the meantime."""
-        hit_pages = self._match_prefix(req, chains)
-        n_hit = len(hit_pages)
-        new_pages = self.pool.alloc(need - n_hit, evict_cb=self._spill)
-        if new_pages is None:                   # pool exhausted by live slots:
-            for p in hit_pages:                 # defer; decode will free pages
-                self.pool.unref(p)
-            return None
-        pages = hit_pages + new_pages
-        req.pages = pages
-        req.prefix_hit_tokens = n_hit * self.page_size
-        with self._lock:
-            self._prompt_tokens += len(req.prompt)
-            self._hit_tokens += n_hit * self.page_size
-        return pages, n_hit
-
-    def _install_slot(self, req: Request, pages: List[int]) -> int:
-        """Acquire a decode slot and point its block-table row at pages."""
-        slot = self.slots.acquire(req)
-        row = np.full(self.pages_per_seq, SCRATCH_PAGE, np.int32)
-        row[:len(pages)] = pages
-        self._table[slot] = row
-        return slot
-
-    def _admit_one(self, req: Request) -> Optional[int]:
-        pg, M = self.page_size, self.pages_per_seq
-        L = len(req.prompt)
-        need = -(-(L + req.max_new_tokens) // pg)
-        chains = (chain_keys(req.prompt, pg) if self.scfg.prefix_cache
-                  else [])
-        got = self._reserve_pages(req, chains, need)
-        if got is None:
-            return None
-        pages, n_hit = got
-        hit_len = n_hit * pg
-
-        slot = self._install_slot(req, pages)
-        row = self._table[slot]
-        # Hit pages scatter to the scratch page (never rewrite shared pages).
-        assign = np.full(M, SCRATCH_PAGE, np.int32)
-        assign[n_hit:len(pages)] = pages[n_hit:]
-
-        suffix = req.prompt[hit_len:]
-        # Clamp the suffix bucket so hit_len + S never wraps the solo cache.
-        S = max(min(self.scheduler.bucket_for(len(suffix)),
-                    self.scfg.max_seq_len - hit_len), len(suffix), 1)
-        toks = np.zeros((1, S), np.int32)
-        toks[0, :len(suffix)] = suffix
-        positions = (hit_len + np.arange(S, dtype=np.int32))[None, :]
-        sp = req.sampling
-        batch = {"tokens": jnp.asarray(toks),
-                 "positions": jnp.asarray(positions),
-                 "length": jnp.asarray(L, jnp.int32),
-                 "hit_len": jnp.asarray(hit_len, jnp.int32),
-                 "table": jnp.asarray(row),
-                 "assign": jnp.asarray(assign),
-                 "slot": jnp.asarray(slot, jnp.int32),
-                 "temp": jnp.asarray(sp.temperature, jnp.float32),
-                 "top_k": jnp.asarray(sp.top_k, jnp.int32),
-                 "top_p": jnp.asarray(sp.top_p, jnp.float32)}
-        self.states, tok, self._key, self._mirrors = self._admit_prog(
-            self.params, self.states, batch, self._key, self._mirrors)
-        if self.scfg.prefix_cache:
-            self._register_prefix(req, chains, pages, n_hit)
-        return int(tok[0])
-
-    # -- decode / release ------------------------------------------------------
-    def _decode_device(self) -> np.ndarray:
-        self.states, toks_dev, self._key, self._mirrors = self._decode_prog(
-            self.params, self.states, self._key, self._mirrors,
-            jnp.asarray(self._table))
-        return np.asarray(toks_dev)
-
-    def _release_slot(self, slot: int) -> None:
-        req = self.slots.get(slot)
-        if req is not None:
-            for p in req.pages:
-                self.pool.unref(p)      # shared pages stay; private ones free
-            req.pages = []
-        # Point the retired row at the scratch page: its mirrors keep
-        # advancing through the fixed-shape decode, and those garbage writes
-        # must never land in a page that gets reallocated.
-        self._table[slot] = SCRATCH_PAGE
-        super()._release_slot(slot)
-
-    def stats(self) -> Dict[str, Any]:
-        s = super().stats()
-        with self._lock:
-            hit, prompt = self._hit_tokens, self._prompt_tokens
-        s["kv_pool"] = self.pool.stats()
-        s["cold_pages"] = len(self.cold) if self.cold is not None else 0
-        s["resident_cache_bytes"] = self.cache_bytes()
-        s["prefix_hit_rate"] = hit / prompt if prompt else 0.0
-        return s
-
-
-class PrefillWorker(PagedEngine):
-    """The *prefill endpoint* of a disaggregated serve plane.
-
-    A full ``PagedEngine`` (own page pool, own prefix index, own cold tier)
-    that only ever runs the fused bucket-prefill/admit program: instead of
-    joining a decode batch, the freshly-computed KV pages are sliced out of
-    the pool (``read_page``), staged to host memory, and returned as a
-    transferable ``KVHandoff``.  The slot and pages are released
-    immediately — full prompt pages stay behind in the prefix index, so
-    prompts sharing a prefix are prefilled once per *endpoint*, not once per
-    request."""
-
-    def prefill_to_handoff(self, rid: int, prompt: np.ndarray,
-                           max_new_tokens: int,
-                           sampling: SamplingParams) -> Optional[KVHandoff]:
-        """Bucket-prefill ``prompt`` and export its KV pages.  Returns None
-        when this endpoint is out of pages (the caller prefills locally)."""
-        # max_new_tokens=1 on the worker request: allocate only the pages
-        # the prompt (plus the sampled first token's logical page) covers —
-        # the decode endpoint owns the decode-horizon pages.
-        req = Request(next(self._rid), np.asarray(prompt, np.int32), 1,
-                      sampling)
-        tok0 = self._admit_one(req)
-        if tok0 is None:
-            return None
-        pg = self.page_size
-        n_prompt = -(-len(req.prompt) // pg)
-        blobs = [jax.device_get(self._read_page_prog(
-                     self.states, jnp.asarray(p, jnp.int32)))
-                 for p in req.pages[:n_prompt]]
-        handoff = KVHandoff(
-            rid=rid, prompt_len=len(req.prompt),
-            max_new_tokens=max_new_tokens, first_token=tok0,
-            page_blobs=blobs, chains=chain_keys(req.prompt, pg),
-            sampling=dataclasses.asdict(req.sampling))
-        self._release_slot(req.slot)        # pages unref'd; full prompt
-        return handoff                      # pages stay prefix-cached
-
-
-class DisaggregatedEngine(PagedEngine):
-    """Prefill/decode disaggregation across two engine endpoints (advice #3:
-    the off-path device is a *new endpoint in the network*, an independent
-    worker — not a cache bolted onto the data path).
-
-    This instance is the **decode endpoint**: it owns the decode batch, the
-    decode-side page pool and the result store.  A second engine instance —
-    a ``PrefillWorker`` — is the **prefill endpoint**.  Per request, the
-    ``PrefillRoutePlanner``/``CostModel`` pair decides (prompt length vs.
-    handoff link cost, scaled by decode batch pressure) whether to:
-
-      * **route remote** — the prefill endpoint bucket-prefills the prompt
-        and publishes the KV pages + first token + sampling state as a
-        ``KVHandoff`` blob through a ``ShardedStore`` hash-sharded by
-        request id over peer endpoints (dicts in-process,
-        ``BlobEndpoint``-wrapped ``PeerEndpoint`` directories across hosts);
-        the decode endpoint consumes the blob, faults the pages into its own
-        ``KVBlockPool`` (deduping against its prefix index first) and joins
-        the request into the running decode batch — no prefill program ever
-        steals a decode step here; or
-      * **prefill locally** — short prompts lose to the link latency floor
-        and take the ordinary ``PagedEngine`` admit path.
-
-    Every decision lands in an ``OffloadPlan`` (``route_plan().to_table()``)
-    so the serve plane's placement rationale stays as explainable as the
-    training plane's.  On this container both endpoints live in one
-    process; the handoff blob is the deliberately narrow interface, exactly
-    how ``core.endpoint`` abstracts peers."""
-
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 policy: ExecPolicy = ExecPolicy(),
-                 executor: Optional[BackgroundExecutor] = None,
-                 result_endpoints: Optional[Sequence[Any]] = None,
-                 handoff_endpoints: Optional[Sequence[Any]] = None,
-                 profile: Optional[Any] = None):
-        super().__init__(cfg, params, scfg, policy, executor,
-                         result_endpoints)
-        pre_scfg = dataclasses.replace(
-            scfg, max_batch=max(1, scfg.prefill_slots),
-            num_pages=scfg.prefill_pages, disaggregate=False)
-        self.prefill = PrefillWorker(cfg, params, pre_scfg, policy,
-                                     executor=self.executor)
-        endpoints = (list(handoff_endpoints)
-                     if handoff_endpoints is not None
-                     else [dict() for _ in range(max(1, scfg.handoff_shards))])
-        self.handoff_store = ShardedStore(endpoints)
-        n_params = sum(int(x.size) for x in jax.tree.leaves(params))
-        self.router = PrefillRoutePlanner(flops_per_token=2.0 * n_params,
-                                          profile=profile)
-        # Decode-side bytes one handoff page carries (the link-cost input).
-        self._page_bytes = self.cache_bytes() / max(1, self.pool.num_pages)
-        self.prefill_seconds = 0.0      # time spent on the other endpoint
-        self._remote_admits = 0
-        self._local_admits = 0
-        self._deferred_imports = 0
-        self._handoff_bytes = 0
-        # rid -> routing decision, so a deferred admission retries with the
-        # same placement instead of re-deciding (and re-counting) each
-        # attempt; entries clear once the request is actually admitted.
-        self._route_cache: Dict[int, bool] = {}
-
-    # -- routing ---------------------------------------------------------------
-    def _route_remote(self, req: Request) -> bool:
-        mode = self.scfg.disagg_route
-        if mode in ("remote", "local"):
-            self.router.note_forced(req.rid, mode == "remote",
-                                    f"disagg_route={mode!r}")
-            return mode == "remote"
-        n_pages = -(-len(req.prompt) // self.page_size)
-        d = self.router.route(req.rid, len(req.prompt),
-                              n_pages * self._page_bytes,
-                              len(self.slots.active()), self.scfg.max_batch)
-        return d.placement == Placement.SIDECAR_ASYNC
-
-    def route_plan(self):
-        """The accumulated per-request routing decisions as an
-        ``OffloadPlan`` — ``.to_table()`` is the explainability exhibit."""
-        return self.router.plan()
-
-    # -- admission -------------------------------------------------------------
-    def _admit_one(self, req: Request) -> Optional[int]:
-        key = f"kv/{req.rid}"
-        data = self.handoff_store.pop(key)  # deferred import retrying?
-        if data is None:
-            remote = self._route_cache.get(req.rid)
-            if remote is None:
-                remote = self._route_remote(req)
-                self._route_cache[req.rid] = remote
-            if not remote:
-                return self._admit_local(req)
-            t0 = time.perf_counter()
-            handoff = self.prefill.prefill_to_handoff(
-                req.rid, req.prompt, req.max_new_tokens, req.sampling)
-            self.prefill_seconds += time.perf_counter() - t0
-            if handoff is None:             # prefill endpoint out of pages:
-                return self._admit_local(req)   # degrade this attempt
-            # Publish-then-consume through the store on purpose, even though
-            # both endpoints share this process: the blob crossing the
-            # ShardedStore/BlobEndpoint boundary *is* the endpoint
-            # interface, and keeping it on the path keeps the reported
-            # decode-side cost honest about the link.
-            self.handoff_store.put(key, pack_handoff(handoff))
-            data = self.handoff_store.pop(key)
-        tok0 = self._import_handoff(req, unpack_handoff(data))
-        if tok0 is None:
-            # Decode pool exhausted: keep the blob so the deferred-admission
-            # retry imports it instead of re-running the remote prefill.
-            self.handoff_store.put(key, data)
-            self._deferred_imports += 1
-            return None
-        self._remote_admits += 1            # counted once, on success only
-        self._handoff_bytes += len(data)
-        self._route_cache.pop(req.rid, None)
-        return tok0
-
-    def _admit_local(self, req: Request) -> Optional[int]:
-        tok0 = super()._admit_one(req)
-        if tok0 is not None:                # deferred attempts don't count
-            self._local_admits += 1
-            self._route_cache.pop(req.rid, None)
-        return tok0
-
-    def _import_handoff(self, req: Request,
-                        h: KVHandoff) -> Optional[int]:
-        """Fault a handoff's pages into the decode-side pool and splice the
-        request into the decode batch — the decode half of the narrow
-        interface.  Pages the decode-side prefix index already holds (hot or
-        cold) are reused instead of imported; imported full prompt pages are
-        registered for future sharing, so both endpoints keep their own
-        working prefix caches."""
-        pg = self.page_size
-        L = h.prompt_len
-        n_prompt = h.num_prompt_pages(pg)
-        # A blob popped at kv/{rid} must actually be *this* request's: a
-        # colliding rid against a persistent handoff store (relaunch over
-        # the same BlobEndpoint directories) would otherwise splice another
-        # prompt's KV pages into the batch silently.
-        if (h.rid != req.rid or L != len(req.prompt)
-                or h.max_new_tokens != req.max_new_tokens
-                or n_prompt != len(h.page_blobs)):
-            raise ValueError(
-                f"stale/malformed handoff at kv/{req.rid}: blob carries "
-                f"rid={h.rid} prompt_len={L} max_new={h.max_new_tokens} "
-                f"({len(h.page_blobs)} page blobs, expected {n_prompt})")
-        need = -(-(L + req.max_new_tokens) // pg)
-        chains = [bytes(c) for c in h.chains] if self.scfg.prefix_cache \
-            else []
-        got = self._reserve_pages(req, chains, need)
-        if got is None:                     # decode pool exhausted: defer
-            return None
-        pages, n_hit = got
-
-        for i in range(n_hit, n_prompt):            # fault transferred pages
-            self.states = self._write_page_prog(
-                self.states, jnp.asarray(pages[i], jnp.int32),
-                h.page_blobs[i])
-        slot = self._install_slot(req, pages)
-        # The blob's sampling state is the wire-format truth (a cross-host
-        # decode endpoint has no Request object to fall back on).
-        sp = h.sampling
-        m = self._mirrors
-        self._mirrors = {
-            "tok": m["tok"].at[slot].set(h.first_token),
-            "pos": m["pos"].at[slot].set(L),
-            "temp": m["temp"].at[slot].set(float(sp["temperature"])),
-            "top_k": m["top_k"].at[slot].set(int(sp["top_k"])),
-            "top_p": m["top_p"].at[slot].set(float(sp["top_p"])),
-        }
-        if self.scfg.prefix_cache:
-            self._register_prefix(req, chains, pages, n_hit)
-        return int(h.first_token)
-
-    # -- introspection / lifecycle ---------------------------------------------
-    def stats(self) -> Dict[str, Any]:
-        s = super().stats()
-        s["prefill_endpoint"] = {
-            "pool": self.prefill.pool.stats(),
-            "busy_s": round(self.prefill_seconds, 4),
-        }
-        s["handoffs"] = {
-            "remote_admits": self._remote_admits,
-            "local_admits": self._local_admits,
-            "deferred_imports": self._deferred_imports,
-            "bytes": self._handoff_bytes,
-        }
-        return s
-
-    def close(self) -> None:
-        self.prefill.close()
-        super().close()
-
-
-class FixedBatchEngine:
-    """Old drain-the-whole-batch engine: pads the active set to ``max_batch``
-    and runs every request to the same horizon.  Kept as the benchmark
-    baseline for ``benchmarks/serve_continuous.py``."""
-
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 policy: ExecPolicy = ExecPolicy()):
-        self.cfg, self.scfg = cfg, scfg
-        self.params = params
-        self.policy = policy
-        self._prefill = jax.jit(make_prefill_step(cfg, policy))
-        self._decode = jax.jit(make_decode_step(cfg, policy), donate_argnums=1)
-        self._key = jax.random.PRNGKey(scfg.seed)
-
-    def generate(self, prompts: List[np.ndarray], max_new_tokens: int,
-                 frontend_embeds: Optional[np.ndarray] = None
-                 ) -> Dict[int, Request]:
-        """Batched generation.  Prompts must be equal length (the engine runs
-        fixed-shape programs; host-side length bucketing is the caller's
-        job — the limitation the continuous engine removes)."""
-        B = len(prompts)
-        lens = {len(p) for p in prompts}
-        if len(lens) != 1:
-            raise ValueError("FixedBatchEngine batches must be "
-                             f"length-bucketed; got lengths {sorted(lens)}")
-        S = max(lens.pop(), 1)
-        reqs = {i: Request(i, np.asarray(p, np.int32), max_new_tokens)
-                for i, p in enumerate(prompts)}
-        toks = np.stack([np.asarray(p, np.int32) for p in prompts])
-        positions = np.broadcast_to(
-            np.arange(S, dtype=np.int32)[None, :], (B, S)).copy()
-
-        # Fixed capacity keeps prefill/decode shapes stable across calls
-        # (capacity=S+max_new would retrace per horizon).
-        states = init_decode_state(
-            self.cfg, B, capacity=max(self.scfg.max_seq_len,
-                                      S + max_new_tokens))
-        batch = {"tokens": jnp.asarray(toks),
-                 "positions": jnp.asarray(positions)}
-        if frontend_embeds is not None:
-            batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
-        states, logits = self._prefill(self.params, states, batch)
-        t_first = time.time()
-
-        cur_pos = np.array([len(p) for p in prompts], np.int32)
-        for r in reqs.values():
-            r.first_token_at = t_first
-        for step in range(max_new_tokens):
-            self._key, sk = jax.random.split(self._key)
-            next_tok = sample(logits, sk, self.scfg)        # (B,)
-            host_tok = np.asarray(next_tok)
-            for i, r in reqs.items():
-                if len(r.output) < r.max_new_tokens:
-                    r.output.append(int(host_tok[i]))
-            if step == max_new_tokens - 1:
-                break
-            batch = {"tokens": next_tok[:, None],
-                     "positions": jnp.asarray(cur_pos)[:, None]}
-            states, logits = self._decode(self.params, states, batch)
-            cur_pos = cur_pos + 1
-        done = time.time()
-        for r in reqs.values():
-            r.finished_at = done
-        return reqs
+from repro.serve.disagg import DisaggregatedEngine, PrefillWorker
+from repro.serve.engines import (
+    ContinuousEngine, FixedBatchEngine, PagedEngine, ServeEngine)
+from repro.serve.programs import (
+    _make_admit_program, _make_decode_program, _make_paged_admit_program,
+    _make_paged_decode_program)
+from repro.serve.scheduler import (
+    needs_exact_prefill, QueueFull, Request, Scheduler, SlotTable)
+
+__all__ = [
+    "ContinuousEngine", "DisaggregatedEngine", "FixedBatchEngine",
+    "PagedEngine", "PrefillWorker", "QueueFull", "Request", "Scheduler",
+    "ServeEngine", "SlotTable", "needs_exact_prefill",
+    "_make_admit_program", "_make_decode_program",
+    "_make_paged_admit_program", "_make_paged_decode_program",
+]

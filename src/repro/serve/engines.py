@@ -1,0 +1,861 @@
+"""Serve engines: continuous batching, paged KV-cache, fixed-batch baseline.
+
+The split follows the paper's doctrine directly:
+
+  * **Fast path (device)** — the fixed-shape jitted programs in
+    ``serve.programs``: bucket prefill (batch 1, one trace per bucket
+    length), batched decode (always ``max_batch`` wide), and slot insertion.
+    The device never sees a dynamic shape, so heterogeneous traffic costs no
+    recompiles.
+  * **Admission plane (host, G2)** — ``serve.scheduler``: between decode
+    steps, finished requests are evicted (per-request EOS / max-token),
+    freed slots are recycled, and queued requests are prefilled solo and
+    spliced into the running batch — new arrivals join mid-decode instead of
+    waiting for a full batch to drain.
+  * **Bookkeeping (sidecar, G2)** — latency records, token accounting and
+    periodic engine stats go through ``BackgroundExecutor``; the step loop
+    never blocks on them.
+  * **Results (G3)** — completed generations land in a ``ShardedStore``
+    hash-sharded over peer endpoints, the paper's Redis-slot scheme.
+
+``FixedBatchEngine`` keeps the old drain-the-whole-batch behavior as the
+benchmark baseline (``benchmarks/serve_continuous.py``).
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model import ModelConfig
+from repro.config.run import ServeConfig
+from repro.core.endpoint import ShardedStore
+from repro.core.executor import BackgroundExecutor
+from repro.models.transformer import (
+    ExecPolicy, init_decode_state, init_paged_decode_state, supports_paging)
+from repro.serve import programs
+from repro.serve.kvpool import (
+    SCRATCH_PAGE, ColdTier, KVBlockPool, KVHandoff, chain_keys,
+    unpack_handoff)
+from repro.serve.sampler import SamplingParams, sample
+from repro.serve.scheduler import (
+    needs_exact_prefill, QueueFull, Request, Scheduler, SlotTable)
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+class ContinuousEngine:
+    """Continuous-batching engine; see module docstring for the G2/G3 split."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 policy: ExecPolicy = ExecPolicy(),
+                 executor: Optional[BackgroundExecutor] = None,
+                 result_endpoints: Optional[Sequence[Any]] = None):
+        self.cfg, self.scfg = cfg, scfg
+        self.params = params
+        self.policy = policy
+        self._key = jax.random.PRNGKey(scfg.seed)
+
+        B = scfg.max_batch
+        self.slots = SlotTable(B)
+        self.scheduler = Scheduler(scfg, exact_buckets=needs_exact_prefill(cfg))
+        # Per-slot mirrors live on device (see programs.decode_program); the
+        # host only keeps what its eviction logic reads.
+        self._mirrors = {
+            "tok": jnp.zeros(B, jnp.int32),
+            "pos": jnp.zeros(B, jnp.int32),
+            "temp": jnp.zeros(B, jnp.float32),
+            "top_k": jnp.zeros(B, jnp.int32),
+            "top_p": jnp.ones(B, jnp.float32),
+        }
+        self._eos = np.full(B, -1, np.int32)
+        self._host_temps = np.zeros(B, np.float32)
+        self._build_device_plane()
+
+        # Sidecar plane (G2) + sharded result store (G3).
+        self._own_executor = executor is None
+        self.executor = executor or BackgroundExecutor(
+            num_threads=2, max_inflight=8, backpressure="block")
+        endpoints = (list(result_endpoints) if result_endpoints is not None
+                     else [dict() for _ in range(max(1, scfg.result_shards))])
+        self.store = ShardedStore(endpoints)
+        # slot->endpoint ownership is static; compute the balance once so
+        # stats() stays O(1) on the decode loop
+        self._shard_balance = self.store.balance()
+        self.records: List[Dict[str, Any]] = []
+        self.stats_log: List[Dict[str, Any]] = []
+        # One lock covers everything mutated by the engine loop and read from
+        # other threads (records, stats_log, step/token counters): stats()
+        # and result() may legally race the loop thread.
+        self._lock = threading.Lock()
+
+        self._rid = itertools.count()
+        self._requests: Dict[int, Request] = {}
+        self._steps = 0
+        self._tokens_out = 0
+        self._closed = False
+        self._loop_error: Optional[BaseException] = None
+        # Serializes the step loop against close()/failure teardown: a
+        # close() racing a mid-flight step must not release slots the loop
+        # is still decoding (RLock: the step exception path re-enters via
+        # _fail_pending).  submit() deliberately does NOT take it — a
+        # producer must never stall behind a device step — so queue
+        # admission vs. teardown atomicity gets its own small lock.
+        self._lifecycle = threading.RLock()
+        self._admission = threading.Lock()
+
+    def _build_device_plane(self) -> None:
+        """Fast path: two fixed-shape fused programs (admit retraces once per
+        bucket length; decode is a single trace), shared process-wide through
+        ``serve.programs``'s compiled-program cache.  Donations keep the
+        batch state and per-slot mirrors updated in place.  ``PagedEngine``
+        overrides this with block-table programs over a shared page pool."""
+        cfg, scfg = self.cfg, self.scfg
+        self._admit_prog = programs.admit_program(
+            cfg, self.policy, scfg.max_seq_len)
+        self._decode_prog = programs.decode_program(cfg, self.policy)
+        self.states = init_decode_state(cfg, scfg.max_batch,
+                                        capacity=scfg.max_seq_len)
+
+    # -- request lifecycle ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               sampling: Optional[SamplingParams] = None,
+               frontend_embeds: Optional[np.ndarray] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        # Validate the budget *before* using it in the length arithmetic:
+        # an invalid budget must get the budget error, not a misleading
+        # max_seq_len complaint (or none at all, for large negatives).
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(prompt) + max_new_tokens > self.scfg.max_seq_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_seq_len ({self.scfg.max_seq_len})")
+        req = Request(next(self._rid), prompt, max_new_tokens,
+                      sampling or SamplingParams.from_config(self.scfg),
+                      frontend_embeds=frontend_embeds)
+        # Atomic against _fail_pending's teardown so a request can never
+        # slip into the queue after close() already failed everything.
+        with self._admission:
+            if self._closed:
+                raise RuntimeError("engine is closed; no new submissions")
+            self.scheduler.push(req)      # raises QueueFull at capacity
+            self._requests[req.rid] = req
+        return req.rid
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int,
+                  hit_pages: int = 0) -> bool:
+        """Whether an admission now would find a slot (and, for paged
+        engines, pages) without deferring — the cluster router's dispatch
+        gate.  Queued requests are counted against the free slots: they will
+        consume them first."""
+        del prompt_len, max_new_tokens, hit_pages
+        return self.slots.free_count() > self.scheduler.depth()
+
+    def preempt(self, rid: int) -> Optional[Request]:
+        """Withdraw an unfinished request, releasing its slot (and pages)
+        immediately.  Returns the request — partial output preserved — so the
+        caller can re-enqueue a continuation, or None if the request is
+        unknown or already finished.  The cluster's QoS plane uses this to
+        evict best-effort work under paid-class pressure."""
+        with self._lifecycle:
+            req = self._requests.get(rid)
+            if req is None or req.done:
+                return None
+            if req.slot >= 0 and self.slots.get(req.slot) is req:
+                self._release_slot(req.slot)
+                req.slot = -1
+            else:
+                self.scheduler.remove(req)
+            del self._requests[rid]
+            return req
+
+    def _admit(self) -> int:
+        """Fill free slots from the queue: solo bucket prefill, sample the
+        first token, splice the state into the running batch."""
+        admitted = 0
+        while self.slots.free_count() and not self.scheduler.empty():
+            req = self.scheduler.pop()
+            tok0 = self._admit_one(req)
+            if tok0 is None:            # resource shortage (paged engine):
+                self.scheduler.push_front(req)   # retry after evictions free
+                break                            # pages on later steps
+            sp = req.sampling
+            slot = req.slot
+            req.first_token_at = time.time()
+            req.output.append(tok0)
+            admitted += 1
+            self._eos[slot] = sp.eos_id
+            self._host_temps[slot] = sp.temperature
+            if (sp.eos_id >= 0 and tok0 == sp.eos_id) \
+                    or req.max_new_tokens <= 1:
+                self._release_slot(slot)  # finished during admission
+                self._finish(req)
+        return admitted
+
+    def _admit_one(self, req: Request) -> Optional[int]:
+        """Acquire a slot and run the fused admit program for one request.
+        Returns the first sampled token, or None if admission must wait."""
+        L = len(req.prompt)
+        # bucket_for clamps to capacity: an over-capacity bucket would
+        # ring-wrap the prefill and drop the head of the prompt's cache.
+        S = self.scheduler.bucket_for(L)
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :L] = req.prompt
+        positions = np.arange(S, dtype=np.int32)[None, :]
+        sp = req.sampling
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(positions),
+                 "length": jnp.asarray(L, jnp.int32),
+                 "temp": jnp.asarray(sp.temperature, jnp.float32),
+                 "top_k": jnp.asarray(sp.top_k, jnp.int32),
+                 "top_p": jnp.asarray(sp.top_p, jnp.float32)}
+        if req.frontend_embeds is not None:
+            batch["frontend_embeds"] = jnp.asarray(req.frontend_embeds)
+        slot = self.slots.acquire(req)
+        self.states, tok, self._key, self._mirrors = self._admit_prog(
+            self.params, self.states, batch,
+            jnp.asarray(slot, jnp.int32), self._key, self._mirrors)
+        return int(tok[0])
+
+    def _release_slot(self, slot: int) -> None:
+        self.slots.release(slot)
+        # Zero the freed slot's device temperature so an all-greedy batch
+        # regains the cheap argmax sampling path (a stale temp > 0 would
+        # force the stochastic branch on every later step).
+        if self._host_temps[slot] > 0.0:
+            self._host_temps[slot] = 0.0
+            self._mirrors = dict(self._mirrors,
+                                 temp=jnp.asarray(self._host_temps))
+
+    def _decode_device(self) -> np.ndarray:
+        """Run the fused decode program; returns the (B,) sampled tokens."""
+        self.states, toks_dev, self._key, self._mirrors = self._decode_prog(
+            self.params, self.states, self._key, self._mirrors)
+        return np.asarray(toks_dev)
+
+    def _decode_once(self) -> bool:
+        """One batched decode step over all slots + per-slot evictions."""
+        active = self.slots.active()
+        if not active:
+            return False
+        toks = self._decode_device()
+        for req in active:
+            slot = req.slot
+            tok = int(toks[slot])
+            req.output.append(tok)
+            with self._lock:
+                self._tokens_out += 1
+            if (self._eos[slot] >= 0 and tok == self._eos[slot]) \
+                    or len(req.output) >= req.max_new_tokens:
+                self._release_slot(slot)
+                self._finish(req)
+        with self._lock:
+            self._steps += 1
+            steps = self._steps
+        if self.scfg.stats_every and steps % self.scfg.stats_every == 0:
+            snap = self.stats()
+            self.executor.submit("serve.stats", self._append_stats, snap)
+        return True
+
+    def _append_stats(self, snap: Dict[str, Any]) -> None:
+        with self._lock:
+            self.stats_log.append(snap)
+
+    def step(self) -> bool:
+        """Admit + one decode step.  Returns False once fully idle.
+
+        An exception out of the decode loop is terminal for every in-flight
+        request: it is recorded (so ``result()`` surfaces it instead of
+        reporting the request as forever "still decoding") and every
+        pending request gets a terminal error record before re-raising."""
+        with self._lifecycle:
+            if self._closed:
+                return False
+            try:
+                admitted = self._admit()
+                return self._decode_once() or admitted > 0
+            except Exception as e:
+                self._loop_error = e
+                self._fail_pending(
+                    f"decode loop died: {type(e).__name__}: {e}")
+                raise
+
+    def run(self) -> None:
+        """Drive until queue and slots are empty (the serve loop)."""
+        while self.step():
+            pass
+
+    def _finish(self, req: Request) -> None:
+        done_at = time.time()
+        payload = {
+            "rid": req.rid,
+            "tokens": list(req.output),
+            "prompt_len": int(len(req.prompt)),
+            "ttft_s": req.first_token_at - req.submitted_at,
+            "e2e_s": done_at - req.submitted_at,
+        }
+        # Latency-insensitive bookkeeping rides the sidecar (G2): the store
+        # write + latency record never block the decode loop.  Submit BEFORE
+        # marking the request done: a concurrent result(rid, wait=True) that
+        # observes req.done must find the record covered by its drain()
+        # (submitting after would open a done-but-not-yet-recorded window).
+        self.executor.submit(f"serve.record/{req.rid}", self._record, payload)
+        req.finished_at = done_at
+
+    def _record(self, payload: Dict[str, Any]) -> None:
+        self.store.put(f"req/{payload['rid']}", payload)
+        with self._lock:
+            self.records.append(payload)
+
+    def _fail_pending(self, reason: str) -> None:
+        """Terminate every unfinished request with an error record.
+
+        Runs on close() and on decode-loop death so a ``result(wait=True)``
+        waiter always finds a terminal record instead of waiting on a
+        request that can no longer finish.  Records are written
+        synchronously — this path is not latency-sensitive and must not
+        depend on the sidecar still being alive.  Holds the admission lock
+        so no submit() can enqueue between the sweep and the queue drain."""
+        with self._admission:
+            pending = [r for r in self._requests.values() if not r.done]
+            for req in pending:
+                if req.slot >= 0 and self.slots.get(req.slot) is req:
+                    self._release_slot(req.slot)
+                done_at = time.time()
+                self._record({
+                    "rid": req.rid,
+                    "tokens": list(req.output),
+                    "prompt_len": int(len(req.prompt)),
+                    "ttft_s": (req.first_token_at - req.submitted_at
+                               if req.first_token_at else 0.0),
+                    "e2e_s": done_at - req.submitted_at,
+                    "error": reason,
+                })
+                req.finished_at = done_at
+            while not self.scheduler.empty():
+                self.scheduler.pop()
+
+    # -- results / introspection ----------------------------------------------
+    def result(self, rid: int, wait: bool = True) -> Dict[str, Any]:
+        """Fetch a completed generation from the sharded result store.
+
+        A request the engine can no longer finish is still terminal:
+        ``close()`` and decode-loop death write error records for every
+        pending request, so this returns a payload with an ``"error"`` key
+        instead of hanging the waiter; a decode-loop exception re-raises
+        here with the original as cause."""
+        if wait and not self.executor.drain():
+            raise TimeoutError(
+                f"sidecar drain timed out before req/{rid} was recorded")
+        req = self._requests.get(rid)
+        if req is not None and not req.done:
+            if self._loop_error is not None:
+                raise RuntimeError(
+                    f"request {rid} cannot complete: the decode loop died"
+                ) from self._loop_error
+            raise RuntimeError(
+                f"request {rid} is still queued/decoding; drive step()/run() "
+                "to completion before fetching its result")
+        return self.store.get(f"req/{rid}")
+
+    def request(self, rid: int) -> Request:
+        return self._requests[rid]
+
+    def stats(self) -> Dict[str, Any]:
+        # Counters are mutated by the engine loop thread; snapshot them under
+        # the lock so a concurrent reader never sees a torn update.
+        with self._lock:
+            steps, tokens = self._steps, self._tokens_out
+        return {
+            "steps": steps,
+            "tokens_out": tokens,
+            "active": len(self.slots.active()),
+            "queued": self.scheduler.depth(),
+            "free_slots": self.slots.free_count(),
+            "result_shards": self._shard_balance,
+        }
+
+    def cache_bytes(self) -> int:
+        """Resident KV-cache bytes (dense per-slot buffers or paged pools) —
+        the benchmark's fixed-memory axis."""
+        total = 0
+
+        def visit(path, leaf):
+            nonlocal total
+            last = path[-1]
+            if (isinstance(last, jax.tree_util.DictKey)
+                    and last.key in ("k", "v", "kp", "vp")):
+                total += leaf.nbytes
+            return leaf
+        jax.tree_util.tree_map_with_path(visit, self.states)
+        return total
+
+    def close(self) -> None:
+        """Shut down: fail whatever is still pending (queued or mid-decode)
+        with terminal records so concurrent ``result(wait=True)`` callers
+        wake with an error payload instead of hanging, then drain the
+        sidecar."""
+        with self._lifecycle:       # wait out any in-flight step first
+            if not self._closed:
+                self._closed = True
+                self._fail_pending("engine closed before completion")
+        self.executor.drain()
+        if self._own_executor:
+            self.executor.shutdown(drain=False)
+
+    # -- batch convenience (old ServeEngine.generate API) ----------------------
+    def generate(self, prompts: List[np.ndarray], max_new_tokens: int,
+                 frontend_embeds: Optional[np.ndarray] = None
+                 ) -> Dict[int, Request]:
+        """Submit a list of prompts and drive to completion.  Returns
+        {index -> Request}, matching the old fixed-batch engine's API."""
+        out: Dict[int, Request] = {}
+        for i, p in enumerate(prompts):
+            fe = (np.asarray(frontend_embeds[i:i + 1])
+                  if frontend_embeds is not None else None)
+            while True:
+                try:
+                    rid = self.submit(p, max_new_tokens, frontend_embeds=fe)
+                    break
+                except QueueFull:
+                    self.step()           # make room: drain one decode step
+            out[i] = self._requests[rid]
+        self.run()
+        self.executor.drain()
+        return out
+
+
+# The continuous engine is the default serving entry point.
+ServeEngine = ContinuousEngine
+
+
+class PagedEngine(ContinuousEngine):
+    """Continuous batching over a paged, tiered KV-cache.
+
+    The dense engine allocates ``max_batch x max_seq_len`` cache rows up
+    front — worst-case memory per slot, no sharing, nothing ever cools.
+    This engine replaces that with the paper's endpoint-expansion plane:
+
+      * **Pages** — each attention layer holds one physical page pool
+        (``init_paged_decode_state``); a host-side block table maps each
+        slot's logical pages to pool pages, so resident memory follows the
+        *live token count*, not ``slots x max_seq_len``.
+      * **Prefix reuse (CoW)** — full prompt pages are indexed by rolling
+        content hash (``serve.kvpool``); a request whose prompt shares a
+        prefix refs the same physical pages and prefills only its suffix.
+        Shared pages are read-only by construction (decode appends into
+        privately-owned pages), so copy-on-write never actually copies.
+      * **Tiered memory** — pages of reusable prefixes that lose the LRU
+        race under pool pressure are spilled to a host-endpoint ``ColdTier``
+        through the ``BackgroundExecutor`` sidecar (advice #2: management
+        off the critical path) and faulted back on the next prefix hit
+        (advice #3: the DPU/host as a second memory endpoint).
+      * **Handoff import** — when a ``handoff_store`` is attached, admission
+        first checks it for a ``KVHandoff`` blob published under this
+        request's key (by a ``PrefillWorker`` on another endpoint) and
+        faults those pages in instead of prefilling.  This is what lets a
+        ``DisaggregatedEngine`` — or each decode replica of a
+        ``ServeCluster`` — consume remotely-prefilled prompts.
+
+    Global-attention decoder-only archs only; recurrent/SWA archs keep the
+    dense exact-prefill engine (``supports_paging``).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 policy: ExecPolicy = ExecPolicy(),
+                 executor: Optional[BackgroundExecutor] = None,
+                 result_endpoints: Optional[Sequence[Any]] = None,
+                 handoff_endpoints: Optional[Sequence[Any]] = None,
+                 handoff_ns: str = ""):
+        if not supports_paging(cfg):
+            raise ValueError(
+                f"{cfg.arch_id}: PagedEngine needs an all-global-attention "
+                "decoder-only arch; use ContinuousEngine")
+        if scfg.max_seq_len % scfg.page_size:
+            raise ValueError(f"max_seq_len ({scfg.max_seq_len}) must be a "
+                             f"multiple of page_size ({scfg.page_size})")
+        self.page_size = scfg.page_size
+        self.pages_per_seq = scfg.max_seq_len // scfg.page_size
+        num_pages = scfg.num_pages or (scfg.max_batch * self.pages_per_seq + 1)
+        if num_pages < self.pages_per_seq + 1:
+            raise ValueError(
+                f"num_pages ({num_pages}) must cover one full sequence "
+                f"({self.pages_per_seq}) plus the scratch page")
+        self.pool = KVBlockPool(num_pages, scfg.page_size,
+                                prefix_cache=scfg.prefix_cache)
+        self.cold = ColdTier(scfg.cold_pages) if scfg.cold_pages > 0 else None
+        self._table = np.full((scfg.max_batch, self.pages_per_seq),
+                              SCRATCH_PAGE, np.int32)
+        self._prompt_tokens = 0
+        self._hit_tokens = 0
+        # Handoff-import plane (disaggregated / cluster serving).  The
+        # namespace keeps per-replica keys disjoint when several engines
+        # share one blob store.
+        self.handoff_ns = handoff_ns
+        self.handoff_store = (ShardedStore(list(handoff_endpoints))
+                              if handoff_endpoints is not None else None)
+        self._remote_admits = 0
+        self._local_admits = 0
+        self._deferred_imports = 0
+        self._handoff_bytes = 0
+        super().__init__(cfg, params, scfg, policy, executor,
+                         result_endpoints)
+
+    def _build_device_plane(self) -> None:
+        cfg, scfg = self.cfg, self.scfg
+        self._admit_prog = programs.paged_admit_program(
+            cfg, self.policy, scfg.max_seq_len)
+        self._decode_prog = programs.paged_decode_program(cfg, self.policy)
+        # Page movers for the tiered plane: slice a page out for spilling
+        # (fresh buffers, safe to stage on the sidecar) / write a faulted
+        # page back in place.
+        self._read_page_prog = programs.read_page_program()
+        self._write_page_prog = programs.write_page_program()
+        self.states = init_paged_decode_state(cfg, self.pool.num_pages,
+                                              self.page_size)
+
+    # -- tiered-memory plane ---------------------------------------------------
+    def _spill(self, page: int, chain: bytes) -> None:
+        """Evict a cached prefix page: slice its K/V out of every pool into
+        the cold tier, then let the sidecar stage the slices to host memory
+        (``ColdTier.replace``).  The slice is enqueued on the device stream
+        *before* any later program can reuse the page, so the handoff is
+        race-free; the decode loop never blocks on the device->host copy
+        (advice #2), and a failed/dropped staging task just leaves the
+        device slices in place — never a dangling entry."""
+        if self.cold is None:
+            return
+        blob = self._read_page_prog(self.states, jnp.asarray(page, jnp.int32))
+        self.cold.put(chain, blob)
+        leaves, treedef = jax.tree.flatten(blob)
+        self.executor.submit(
+            f"kv.spill/{chain.hex()[:8]}",
+            functools.partial(self._cold_stage, chain, treedef), *leaves)
+
+    def _cold_stage(self, chain: bytes, treedef, *host_leaves) -> None:
+        # Runs on the sidecar after jax.device_get of every leaf: the cold
+        # entry becomes true host-endpoint memory.
+        self.cold.replace(chain, jax.tree.unflatten(treedef, list(host_leaves)))
+
+    def _fault_in(self, chain: bytes) -> Optional[int]:
+        """Bring a cold prefix page back into the pool.  Returns the hot
+        page (ref'd for the caller) or None on a miss / full pool."""
+        if self.cold is None or not self.cold.contains(chain):
+            return None
+        blob = self.cold.take(chain)
+        if blob is None:
+            return None
+        got = self.pool.alloc(1, evict_cb=self._spill)
+        if got is None:
+            self.cold.put(chain, blob)          # no room: stay cold
+            return None
+        page = got[0]
+        self.states = self._write_page_prog(
+            self.states, jnp.asarray(page, jnp.int32), blob)
+        self.pool.register(chain, page)
+        self.pool.faults += 1
+        return page
+
+    # -- admission -------------------------------------------------------------
+    def _match_prefix(self, req: Request,
+                      chains: List[bytes]) -> List[int]:
+        """Longest chain of *full* prompt pages already resident (hot hit)
+        or spilled (cold fault-in).  Always leaves >= 1 token to prefill so
+        the admit program has a real last-token logit to sample from."""
+        pg = self.page_size
+        limit = (len(req.prompt) - 1) // pg
+        pages: List[int] = []
+        for chain in chains[:limit]:
+            page = self.pool.lookup(chain)
+            if page is not None:
+                self.pool.ref(page)
+                pages.append(page)
+                continue
+            page = self._fault_in(chain)        # alloc() already ref'd it
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def prefix_hits(self, chains: List[bytes]) -> int:
+        """Leading chain keys resident on this engine (hot index or cold
+        tier), *without* mutating LRU order or hit counters — the cluster
+        router's affinity probe."""
+        n = 0
+        for chain in chains:
+            if self.pool.probe(chain) or \
+                    (self.cold is not None and self.cold.contains(chain)):
+                n += 1
+            else:
+                break
+        return n
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int,
+                  hit_pages: int = 0) -> bool:
+        if self.slots.free_count() <= self.scheduler.depth():
+            return False
+        need = -(-(prompt_len + max_new_tokens) // self.page_size)
+        return self.pool.available() >= max(0, need - hit_pages)
+
+    def _register_prefix(self, req: Request, chains: List[bytes],
+                         pages: List[int], n_hit: int) -> None:
+        """Index the freshly-prefilled full prompt pages for future sharing."""
+        for i in range(n_hit, len(req.prompt) // self.page_size):
+            self.pool.register(chains[i], pages[i])
+
+    def _reserve_pages(self, req: Request, chains: List[bytes],
+                       need: int) -> Optional[Tuple[List[int], int]]:
+        """Shared admission half: prefix-match (hot hit or cold fault-in),
+        allocate the remainder, update hit accounting.  Returns
+        ``(pages, n_hit)``, or None when admission must defer — hit refs are
+        rolled back so decode can free pages in the meantime."""
+        hit_pages = self._match_prefix(req, chains)
+        n_hit = len(hit_pages)
+        new_pages = self.pool.alloc(need - n_hit, evict_cb=self._spill)
+        if new_pages is None:                   # pool exhausted by live slots:
+            for p in hit_pages:                 # defer; decode will free pages
+                self.pool.unref(p)
+            return None
+        pages = hit_pages + new_pages
+        req.pages = pages
+        req.prefix_hit_tokens = n_hit * self.page_size
+        with self._lock:
+            self._prompt_tokens += len(req.prompt)
+            self._hit_tokens += n_hit * self.page_size
+        return pages, n_hit
+
+    def _install_slot(self, req: Request, pages: List[int]) -> int:
+        """Acquire a decode slot and point its block-table row at pages."""
+        slot = self.slots.acquire(req)
+        row = np.full(self.pages_per_seq, SCRATCH_PAGE, np.int32)
+        row[:len(pages)] = pages
+        self._table[slot] = row
+        return slot
+
+    def _handoff_key(self, rid: int) -> str:
+        return f"kv/{self.handoff_ns}{rid}"
+
+    def _admit_one(self, req: Request) -> Optional[int]:
+        if self.handoff_store is not None:
+            key = self._handoff_key(req.rid)
+            data = self.handoff_store.pop(key)
+            if data is not None:
+                tok0 = self._import_handoff(req, unpack_handoff(data))
+                if tok0 is None:
+                    # Pool exhausted: keep the blob so the deferred-admission
+                    # retry imports it instead of re-running the remote
+                    # prefill.
+                    self.handoff_store.put(key, data)
+                    self._deferred_imports += 1
+                    return None
+                self._remote_admits += 1        # counted once, on success
+                self._handoff_bytes += len(data)
+                return tok0
+        tok0 = self._admit_pages(req)
+        if tok0 is not None:
+            self._local_admits += 1
+        return tok0
+
+    def _admit_pages(self, req: Request) -> Optional[int]:
+        """Local paged admission: prefix-match, allocate, bucket-prefill the
+        suffix through the fused paged admit program."""
+        pg, M = self.page_size, self.pages_per_seq
+        L = len(req.prompt)
+        need = -(-(L + req.max_new_tokens) // pg)
+        chains = (chain_keys(req.prompt, pg) if self.scfg.prefix_cache
+                  else [])
+        got = self._reserve_pages(req, chains, need)
+        if got is None:
+            return None
+        pages, n_hit = got
+        hit_len = n_hit * pg
+
+        slot = self._install_slot(req, pages)
+        row = self._table[slot]
+        # Hit pages scatter to the scratch page (never rewrite shared pages).
+        assign = np.full(M, SCRATCH_PAGE, np.int32)
+        assign[n_hit:len(pages)] = pages[n_hit:]
+
+        suffix = req.prompt[hit_len:]
+        # Clamp the suffix bucket so hit_len + S never wraps the solo cache.
+        S = max(min(self.scheduler.bucket_for(len(suffix)),
+                    self.scfg.max_seq_len - hit_len), len(suffix), 1)
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :len(suffix)] = suffix
+        positions = (hit_len + np.arange(S, dtype=np.int32))[None, :]
+        sp = req.sampling
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(positions),
+                 "length": jnp.asarray(L, jnp.int32),
+                 "hit_len": jnp.asarray(hit_len, jnp.int32),
+                 "table": jnp.asarray(row),
+                 "assign": jnp.asarray(assign),
+                 "slot": jnp.asarray(slot, jnp.int32),
+                 "temp": jnp.asarray(sp.temperature, jnp.float32),
+                 "top_k": jnp.asarray(sp.top_k, jnp.int32),
+                 "top_p": jnp.asarray(sp.top_p, jnp.float32)}
+        self.states, tok, self._key, self._mirrors = self._admit_prog(
+            self.params, self.states, batch, self._key, self._mirrors)
+        if self.scfg.prefix_cache:
+            self._register_prefix(req, chains, pages, n_hit)
+        return int(tok[0])
+
+    def _import_handoff(self, req: Request,
+                        h: KVHandoff) -> Optional[int]:
+        """Fault a handoff's pages into this engine's pool and splice the
+        request into the decode batch — the decode half of the narrow
+        interface.  Pages the local prefix index already holds (hot or
+        cold) are reused instead of imported; imported full prompt pages are
+        registered for future sharing, so both endpoints keep their own
+        working prefix caches."""
+        pg = self.page_size
+        L = h.prompt_len
+        n_prompt = h.num_prompt_pages(pg)
+        # A blob popped at this request's key must actually be *this*
+        # request's: a colliding rid against a persistent handoff store
+        # (relaunch over the same BlobEndpoint directories) would otherwise
+        # splice another prompt's KV pages into the batch silently.
+        if (h.rid != req.rid or L != len(req.prompt)
+                or h.max_new_tokens != req.max_new_tokens
+                or n_prompt != len(h.page_blobs)):
+            raise ValueError(
+                f"stale/malformed handoff at kv/{req.rid}: blob carries "
+                f"rid={h.rid} prompt_len={L} max_new={h.max_new_tokens} "
+                f"({len(h.page_blobs)} page blobs, expected {n_prompt})")
+        need = -(-(L + req.max_new_tokens) // pg)
+        chains = [bytes(c) for c in h.chains] if self.scfg.prefix_cache \
+            else []
+        got = self._reserve_pages(req, chains, need)
+        if got is None:                     # pool exhausted: defer
+            return None
+        pages, n_hit = got
+
+        for i in range(n_hit, n_prompt):            # fault transferred pages
+            self.states = self._write_page_prog(
+                self.states, jnp.asarray(pages[i], jnp.int32),
+                h.page_blobs[i])
+        slot = self._install_slot(req, pages)
+        # The blob's sampling state is the wire-format truth (a cross-host
+        # decode endpoint has no Request object to fall back on).
+        sp = h.sampling
+        m = self._mirrors
+        self._mirrors = {
+            "tok": m["tok"].at[slot].set(h.first_token),
+            "pos": m["pos"].at[slot].set(L),
+            "temp": m["temp"].at[slot].set(float(sp["temperature"])),
+            "top_k": m["top_k"].at[slot].set(int(sp["top_k"])),
+            "top_p": m["top_p"].at[slot].set(float(sp["top_p"])),
+        }
+        if self.scfg.prefix_cache:
+            self._register_prefix(req, chains, pages, n_hit)
+        return int(h.first_token)
+
+    # -- decode / release ------------------------------------------------------
+    def _decode_device(self) -> np.ndarray:
+        self.states, toks_dev, self._key, self._mirrors = self._decode_prog(
+            self.params, self.states, self._key, self._mirrors,
+            jnp.asarray(self._table))
+        return np.asarray(toks_dev)
+
+    def _release_slot(self, slot: int) -> None:
+        req = self.slots.get(slot)
+        if req is not None:
+            for p in req.pages:
+                self.pool.unref(p)      # shared pages stay; private ones free
+            req.pages = []
+        # Point the retired row at the scratch page: its mirrors keep
+        # advancing through the fixed-shape decode, and those garbage writes
+        # must never land in a page that gets reallocated.
+        self._table[slot] = SCRATCH_PAGE
+        super()._release_slot(slot)
+
+    def stats(self) -> Dict[str, Any]:
+        s = super().stats()
+        with self._lock:
+            hit, prompt = self._hit_tokens, self._prompt_tokens
+        s["kv_pool"] = self.pool.stats()
+        s["cold_pages"] = len(self.cold) if self.cold is not None else 0
+        s["resident_cache_bytes"] = self.cache_bytes()
+        s["prefix_hit_rate"] = hit / prompt if prompt else 0.0
+        if self.handoff_store is not None:
+            s["handoffs"] = {
+                "remote_admits": self._remote_admits,
+                "local_admits": self._local_admits,
+                "deferred_imports": self._deferred_imports,
+                "bytes": self._handoff_bytes,
+            }
+        return s
+
+
+class FixedBatchEngine:
+    """Old drain-the-whole-batch engine: pads the active set to ``max_batch``
+    and runs every request to the same horizon.  Kept as the benchmark
+    baseline for ``benchmarks/serve_continuous.py``."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 policy: ExecPolicy = ExecPolicy()):
+        self.cfg, self.scfg = cfg, scfg
+        self.params = params
+        self.policy = policy
+        self._prefill = jax.jit(make_prefill_step(cfg, policy))
+        self._decode = jax.jit(make_decode_step(cfg, policy), donate_argnums=1)
+        self._key = jax.random.PRNGKey(scfg.seed)
+
+    def generate(self, prompts: List[np.ndarray], max_new_tokens: int,
+                 frontend_embeds: Optional[np.ndarray] = None
+                 ) -> Dict[int, Request]:
+        """Batched generation.  Prompts must be equal length (the engine runs
+        fixed-shape programs; host-side length bucketing is the caller's
+        job — the limitation the continuous engine removes)."""
+        B = len(prompts)
+        lens = {len(p) for p in prompts}
+        if len(lens) != 1:
+            raise ValueError("FixedBatchEngine batches must be "
+                             f"length-bucketed; got lengths {sorted(lens)}")
+        S = max(lens.pop(), 1)
+        reqs = {i: Request(i, np.asarray(p, np.int32), max_new_tokens)
+                for i, p in enumerate(prompts)}
+        toks = np.stack([np.asarray(p, np.int32) for p in prompts])
+        positions = np.broadcast_to(
+            np.arange(S, dtype=np.int32)[None, :], (B, S)).copy()
+
+        # Fixed capacity keeps prefill/decode shapes stable across calls
+        # (capacity=S+max_new would retrace per horizon).
+        states = init_decode_state(
+            self.cfg, B, capacity=max(self.scfg.max_seq_len,
+                                      S + max_new_tokens))
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(positions)}
+        if frontend_embeds is not None:
+            batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
+        states, logits = self._prefill(self.params, states, batch)
+        t_first = time.time()
+
+        cur_pos = np.array([len(p) for p in prompts], np.int32)
+        for r in reqs.values():
+            r.first_token_at = t_first
+        for step in range(max_new_tokens):
+            self._key, sk = jax.random.split(self._key)
+            next_tok = sample(logits, sk, self.scfg)        # (B,)
+            host_tok = np.asarray(next_tok)
+            for i, r in reqs.items():
+                if len(r.output) < r.max_new_tokens:
+                    r.output.append(int(host_tok[i]))
+            if step == max_new_tokens - 1:
+                break
+            batch = {"tokens": next_tok[:, None],
+                     "positions": jnp.asarray(cur_pos)[:, None]}
+            states, logits = self._decode(self.params, states, batch)
+            cur_pos = cur_pos + 1
+        done = time.time()
+        for r in reqs.values():
+            r.finished_at = done
+        return reqs

@@ -1,0 +1,72 @@
+"""Engine selection: one ``EngineMode`` enum, one ``make_engine`` factory.
+
+Replaces the boolean sprawl (``ServeConfig.paged``-style flags plus
+engine-class imports at every call site) with a single axis:
+
+    scfg = ServeConfig(engine_mode="cluster", num_replicas=4)
+    engine = make_engine(cfg, params, scfg)
+
+Legacy boolean configs (``disaggregate=True``) still resolve — with a
+``DeprecationWarning`` — for one PR.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Optional, Sequence, Union
+
+from repro.config.model import ModelConfig
+from repro.config.run import EngineMode, ServeConfig
+from repro.models.transformer import ExecPolicy, supports_paging
+from repro.serve.cluster import ServeCluster, TenantSpec
+from repro.serve.disagg import DisaggregatedEngine
+from repro.serve.engines import (
+    ContinuousEngine, FixedBatchEngine, PagedEngine)
+
+
+def resolve_engine_mode(scfg: ServeConfig) -> EngineMode:
+    """The configured engine mode, deriving it from legacy boolean flags
+    (with a ``DeprecationWarning``) when ``engine_mode`` is unset."""
+    if scfg.engine_mode:
+        mode = EngineMode(scfg.engine_mode)
+        if scfg.disaggregate and mode not in (
+                EngineMode.DISAGGREGATED, EngineMode.CLUSTER):
+            raise ValueError(
+                f"engine_mode={mode.value!r} conflicts with disaggregate=True")
+        return mode
+    if scfg.disaggregate:
+        warnings.warn(
+            "ServeConfig(disaggregate=True) is deprecated; use "
+            "ServeConfig(engine_mode='disaggregated')",
+            DeprecationWarning, stacklevel=3)
+        return EngineMode.DISAGGREGATED
+    return EngineMode.CONTINUOUS
+
+
+EngineLike = Union[ContinuousEngine, FixedBatchEngine, ServeCluster]
+
+
+def make_engine(cfg: ModelConfig, params, scfg: ServeConfig,
+                policy: ExecPolicy = ExecPolicy(),
+                tenants: Optional[Sequence[TenantSpec]] = None,
+                profile: Optional[Any] = None) -> EngineLike:
+    """Build the serve engine ``scfg`` asks for.
+
+    ``tenants`` and ``profile`` only apply to the modes that use them
+    (cluster QoS; disaggregated/cluster routing cost model)."""
+    mode = resolve_engine_mode(scfg)
+    if mode in (EngineMode.PAGED, EngineMode.CLUSTER) \
+            and not supports_paging(cfg):
+        raise ValueError(
+            f"{cfg.arch_id}: engine_mode={mode.value!r} needs an "
+            "all-global-attention decoder-only arch")
+    if mode == EngineMode.FIXED:
+        return FixedBatchEngine(cfg, params, scfg, policy)
+    if mode == EngineMode.CONTINUOUS:
+        return ContinuousEngine(cfg, params, scfg, policy)
+    if mode == EngineMode.PAGED:
+        return PagedEngine(cfg, params, scfg, policy)
+    if mode == EngineMode.DISAGGREGATED:
+        return DisaggregatedEngine(cfg, params, scfg, policy,
+                                   profile=profile)
+    return ServeCluster(cfg, params, scfg, policy, tenants=tenants,
+                        profile=profile)

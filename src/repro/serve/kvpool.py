@@ -173,6 +173,13 @@ class KVBlockPool:
             self._cached.move_to_end(page)       # touched: most-recently-used
         return page
 
+    def probe(self, chain: bytes) -> bool:
+        """Whether a chain is hot-indexed, *without* touching LRU order or
+        hit counters — a read-only affinity probe for the cluster router
+        (a probe that refreshed LRU recency would let routing queries keep
+        pages alive that no request ever reused)."""
+        return chain in self._index
+
     def register(self, chain: bytes, page: int) -> None:
         """Index a freshly-computed full prompt page.  First writer wins: if
         the chain is already indexed (two identical prompts prefilled

@@ -1,0 +1,149 @@
+"""Fused device programs for the serve fast path.
+
+Exactly four fixed-shape jitted program families (the G2 device half):
+bucket admit + batched decode, each in a dense and a paged (block-table)
+variant.  The builders close over nothing but frozen configs, so the jitted
+callables are cached process-wide (``functools.lru_cache``): N replica
+engines of a ``ServeCluster`` — or the pair of endpoints of a
+``DisaggregatedEngine`` — share one compiled program per (config, policy,
+capacity) instead of retracing per instance.  Donation is per-call, so a
+shared program is safe across engines that donate their own buffers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.config.model import ModelConfig
+from repro.models.transformer import (
+    ExecPolicy, init_decode_state, insert_decode_slot, read_page,
+    scatter_solo_pages, write_page)
+from repro.serve.sampler import sample_slots
+from repro.train.steps import (
+    make_bucket_prefill_step, make_decode_step, make_paged_decode_step,
+    make_paged_prefill_step)
+
+
+def _make_admit_program(cfg: ModelConfig, policy: ExecPolicy, capacity: int):
+    """One fused device program per admission: init a fresh solo state,
+    bucket-prefill the prompt, sample the first token, splice the state into
+    the running batch at ``slot``, and update the device-resident per-slot
+    mirrors (token / position / sampling params).  One dispatch per
+    admission is what lets tiny-step serving amortize host overhead (the G2
+    fast-path rule)."""
+    prefill = make_bucket_prefill_step(cfg, policy)
+
+    def admit(params, states, batch, slot, key, mirrors):
+        solo = init_decode_state(cfg, 1, capacity)
+        solo, last_logits = prefill(params, solo, batch)
+        tok, key = sample_slots(last_logits, key, batch["temp"][None],
+                                batch["top_k"][None], batch["top_p"][None])
+        states = insert_decode_slot(states, solo, slot)
+        mirrors = {
+            "tok": mirrors["tok"].at[slot].set(tok[0]),
+            "pos": mirrors["pos"].at[slot].set(batch["length"]),
+            "temp": mirrors["temp"].at[slot].set(batch["temp"]),
+            "top_k": mirrors["top_k"].at[slot].set(batch["top_k"]),
+            "top_p": mirrors["top_p"].at[slot].set(batch["top_p"]),
+        }
+        return states, tok, key, mirrors
+    return admit
+
+
+def _make_decode_program(cfg: ModelConfig, policy: ExecPolicy):
+    """One fused device program per serve step: batched decode + per-slot
+    sampling + key split.  Tokens and positions live in the device-resident
+    ``mirrors``, so the steady-state loop transfers nothing host->device."""
+    decode = make_decode_step(cfg, policy)
+
+    def step(params, states, key, mirrors):
+        batch = {"tokens": mirrors["tok"][:, None],
+                 "positions": mirrors["pos"][:, None]}
+        states, logits = decode(params, states, batch)
+        toks, key = sample_slots(logits, key, mirrors["temp"],
+                                 mirrors["top_k"], mirrors["top_p"])  # (B,)
+        mirrors = dict(mirrors, tok=toks, pos=mirrors["pos"] + 1)
+        return states, toks, key, mirrors
+    return step
+
+
+def _make_paged_admit_program(cfg: ModelConfig, policy: ExecPolicy,
+                              capacity: int):
+    """Paged admission, one fused dispatch: gather the reused prefix pages
+    into a solo dense cache, prefill only the suffix bucket, sample the first
+    token, scatter the new pages into the pool, update the slot mirrors.
+    Prefix-hit pages are mapped to the scratch page in ``assign`` so shared
+    (copy-on-write) pages are never rewritten."""
+    prefill = make_paged_prefill_step(cfg, capacity, policy)
+
+    def admit(params, pstate, batch, key, mirrors):
+        solo, last_logits = prefill(params, pstate, batch)
+        tok, key = sample_slots(last_logits, key, batch["temp"][None],
+                                batch["top_k"][None], batch["top_p"][None])
+        pstate = scatter_solo_pages(pstate, solo, batch["assign"])
+        slot = batch["slot"]
+        mirrors = {
+            "tok": mirrors["tok"].at[slot].set(tok[0]),
+            "pos": mirrors["pos"].at[slot].set(batch["length"]),
+            "temp": mirrors["temp"].at[slot].set(batch["temp"]),
+            "top_k": mirrors["top_k"].at[slot].set(batch["top_k"]),
+            "top_p": mirrors["top_p"].at[slot].set(batch["top_p"]),
+        }
+        return pstate, tok, key, mirrors
+    return admit
+
+
+def _make_paged_decode_program(cfg: ModelConfig, policy: ExecPolicy):
+    """Batched decode through the block table: K/V reads and the new token's
+    write are routed to physical pool pages.  The table rides host->device
+    each step (a few KB — the admission plane owns the page map, the fast
+    path just consumes it)."""
+    decode = make_paged_decode_step(cfg, policy)
+
+    def step(params, pstate, key, mirrors, table):
+        batch = {"tokens": mirrors["tok"][:, None],
+                 "positions": mirrors["pos"][:, None]}
+        pstate, logits = decode(params, pstate, batch, table)
+        toks, key = sample_slots(logits, key, mirrors["temp"],
+                                 mirrors["top_k"], mirrors["top_p"])
+        mirrors = dict(mirrors, tok=toks, pos=mirrors["pos"] + 1)
+        return pstate, toks, key, mirrors
+    return step
+
+
+# -- process-wide compiled-program cache --------------------------------------
+# Keys are frozen dataclasses (ModelConfig, ExecPolicy) plus ints, so equal
+# configs share one jitted callable and its trace cache across engines.
+
+@functools.lru_cache(maxsize=None)
+def admit_program(cfg: ModelConfig, policy: ExecPolicy, capacity: int):
+    return jax.jit(_make_admit_program(cfg, policy, capacity),
+                   donate_argnums=(1, 5))
+
+
+@functools.lru_cache(maxsize=None)
+def decode_program(cfg: ModelConfig, policy: ExecPolicy):
+    return jax.jit(_make_decode_program(cfg, policy), donate_argnums=(1, 3))
+
+
+@functools.lru_cache(maxsize=None)
+def paged_admit_program(cfg: ModelConfig, policy: ExecPolicy, capacity: int):
+    return jax.jit(_make_paged_admit_program(cfg, policy, capacity),
+                   donate_argnums=(1, 4))
+
+
+@functools.lru_cache(maxsize=None)
+def paged_decode_program(cfg: ModelConfig, policy: ExecPolicy):
+    return jax.jit(_make_paged_decode_program(cfg, policy),
+                   donate_argnums=(1, 3))
+
+
+@functools.lru_cache(maxsize=None)
+def read_page_program():
+    return jax.jit(read_page)
+
+
+@functools.lru_cache(maxsize=None)
+def write_page_program():
+    return jax.jit(write_page, donate_argnums=(0,))

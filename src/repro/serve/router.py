@@ -1,0 +1,68 @@
+"""Replica router: live engine signals -> cost-model replica choice.
+
+The serve-plane half of cluster routing.  ``core.costmodel.decide_replica``
+owns the *scoring* (suffix prefill after affinity hits, queue wait, slot and
+page pressure); this module owns the *signal collection* — turning N live
+``PagedEngine`` replicas into ``ReplicaSignals`` snapshots, including the
+prefix-affinity probe: the request's prompt is chain-hashed
+(``kvpool.chain_keys``) and each replica reports how many leading pages it
+already holds (hot index or cold tier), without perturbing LRU state.
+Shared-prefix traffic therefore lands where its KV pages already live, the
+page-locality placement arXiv:2507.04001 argues for.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.characterize import SidecarProfile
+from repro.core.costmodel import Decision, ReplicaSignals
+from repro.core.planner import ReplicaRoutePlanner
+from repro.serve.engines import PagedEngine
+from repro.serve.kvpool import chain_keys
+
+
+class ClusterRouter:
+    """Pick a decode replica per request from live signals + prefix affinity.
+
+    Thin stateful wrapper over ``ReplicaRoutePlanner``: collects each
+    replica's snapshot, runs the cost model, and keeps the per-request
+    decision log (``plan().to_table()``) for explainability."""
+
+    def __init__(self, flops_per_token: float, page_size: int,
+                 profile: Optional[SidecarProfile] = None):
+        self.page_size = page_size
+        self.planner = ReplicaRoutePlanner(flops_per_token, page_size,
+                                           profile=profile)
+
+    def signals(self, replicas: Sequence[PagedEngine], alive: Sequence[bool],
+                chains: List[bytes]) -> List[ReplicaSignals]:
+        out = []
+        for i, rep in enumerate(replicas):
+            if not alive[i]:
+                out.append(ReplicaSignals(f"r{i}", 0, 0, 0, 0, alive=False))
+                continue
+            out.append(ReplicaSignals(
+                name=f"r{i}",
+                free_slots=rep.slots.free_count(),
+                queue_depth=rep.scheduler.depth(),
+                max_slots=rep.scfg.max_batch,
+                free_pages=rep.pool.available(),
+                hit_pages=rep.prefix_hits(chains) if chains else 0))
+        return out
+
+    def pick(self, crid: int, prompt: np.ndarray, max_new_tokens: int,
+             replicas: Sequence[PagedEngine], alive: Sequence[bool]
+             ) -> Tuple[int, Decision, List[ReplicaSignals]]:
+        """Route one request.  Returns ``(replica_index, decision,
+        signals)``; index is -1 when no replica is alive."""
+        chains = (chain_keys(np.asarray(prompt, np.int32), self.page_size)
+                  if any(alive) else [])
+        sig = self.signals(replicas, alive, chains)
+        pages_needed = -(-(len(prompt) + max_new_tokens) // self.page_size)
+        idx, d = self.planner.route(crid, len(prompt), pages_needed, sig)
+        return idx, d, sig
+
+    def plan(self):
+        return self.planner.plan()

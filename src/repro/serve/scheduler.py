@@ -1,0 +1,153 @@
+"""Host-side admission plane: request objects, slot table, bounded queue.
+
+This is the G2 half of the serve split (see ``repro.serve``): everything in
+here runs on the host between device steps — admission, slot recycling,
+length bucketing — and never touches a device buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+from repro.config.model import (
+    MIX_ATTN_LOCAL, MIX_RGLRU, MIX_RWKV6, ModelConfig)
+from repro.config.run import ServeConfig
+from repro.serve.sampler import SamplingParams
+
+
+class QueueFull(RuntimeError):
+    """Raised on submit when the bounded admission queue is at capacity."""
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    frontend_embeds: Optional[np.ndarray] = None   # (1, M, F)
+    submitted_at: float = dataclasses.field(default_factory=time.time)
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+    slot: int = -1
+    output: List[int] = dataclasses.field(default_factory=list)
+    pages: List[int] = dataclasses.field(default_factory=list)  # paged engine
+    prefix_hit_tokens: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.finished_at > 0.0
+
+
+class SlotTable:
+    """Fixed-width slot bookkeeping for the decode batch.
+
+    Admission always takes the *lowest* free index and eviction returns it,
+    so slot assignment is deterministic — the admission/eviction ordering
+    tests pin this down.
+    """
+
+    def __init__(self, width: int):
+        self.width = width
+        self._req: List[Optional[Request]] = [None] * width
+        self._free: List[int] = list(range(width))
+        heapq.heapify(self._free)
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def acquire(self, req: Request) -> int:
+        slot = heapq.heappop(self._free)
+        self._req[slot] = req
+        req.slot = slot
+        return slot
+
+    def release(self, slot: int) -> None:
+        assert self._req[slot] is not None, f"slot {slot} already free"
+        self._req[slot] = None
+        heapq.heappush(self._free, slot)
+
+    def get(self, slot: int) -> Optional[Request]:
+        return self._req[slot]
+
+    def active(self) -> List[Request]:
+        return [r for r in self._req if r is not None]
+
+
+def needs_exact_prefill(cfg: ModelConfig) -> bool:
+    """Archs whose decode state a right-padded prefill would pollute.
+
+    Recurrent mixers fold every (pad) token into O(1) state, and SWA ring
+    caches can be fully overwritten by pads; global-attention caches only
+    need the pads' entries invalidated, which the bucket prefill does.
+
+    Tradeoff: exact-prefill archs ignore ``prefill_buckets`` and retrace the
+    admit program once per *distinct prompt length* (a compile stall on each
+    new length, and an unbounded trace cache on a long-lived server).
+    Callers serving such archs should quantize prompt lengths themselves, or
+    accept the compile cost.
+    """
+    return (any(k in (MIX_RGLRU, MIX_RWKV6, MIX_ATTN_LOCAL)
+                for k in cfg.pattern)
+            or cfg.mlp_kind == "rwkv_cmix")
+
+
+class Scheduler:
+    """Host-side admission queue: bounded FIFO + prefill length bucketing."""
+
+    def __init__(self, scfg: ServeConfig, exact_buckets: bool = False):
+        self.max_queue = scfg.max_queue
+        self.buckets = tuple(sorted(scfg.prefill_buckets))
+        self.exact = exact_buckets
+        self.capacity = scfg.max_seq_len
+        self._dq: "deque[Request]" = deque()
+
+    def push(self, req: Request) -> None:
+        if len(self._dq) >= self.max_queue:
+            raise QueueFull(
+                f"admission queue full ({self.max_queue}); retry after step()")
+        self._dq.append(req)
+
+    def push_front(self, req: Request) -> None:
+        """Requeue at the head (admission deferred on resource shortage);
+        deliberately exempt from the max_queue bound — the request was
+        already admitted to the queue once."""
+        self._dq.appendleft(req)
+
+    def pop(self) -> Request:
+        return self._dq.popleft()
+
+    def remove(self, req: Request) -> bool:
+        """Withdraw a queued request (cluster preemption / pull-back).
+        Returns False if the request was not in the queue."""
+        try:
+            self._dq.remove(req)
+            return True
+        except ValueError:
+            return False
+
+    def depth(self) -> int:
+        return len(self._dq)
+
+    def empty(self) -> bool:
+        return not self._dq
+
+    def bucket_for(self, length: int) -> int:
+        """Bucketed prefill length, clamped to the decode-state capacity.
+
+        The clamp lives here (not at call sites) so *every* caller gets
+        buckets that cannot ring-wrap the prefill: a bucket larger than
+        capacity would silently drop the head of the prompt's cache.
+        """
+        b = length
+        if not self.exact:
+            for cand in self.buckets:
+                if cand >= length:
+                    b = cand
+                    break
+        return max(min(b, self.capacity), length, 1)
