@@ -2,19 +2,38 @@
 
 Every benchmark writes its headline numbers through ``emit`` so the perf
 trajectory is machine-readable — CI asserts the files exist, and a regression
-shows up as a diff instead of a vanished stdout line.
+shows up as a diff instead of a vanished stdout line.  Each payload is
+stamped with the git SHA and a UTC timestamp so a BENCH file is attributable
+to the exact tree that produced it.
 """
 from __future__ import annotations
 
 import json
+import subprocess
+from datetime import datetime, timezone
 from pathlib import Path
 from typing import Any, Dict
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
 def emit(name: str, payload: Dict[str, Any]) -> Path:
-    """Write ``payload`` to ``BENCH_<name>.json`` at the repo root."""
+    """Write ``payload`` to ``BENCH_<name>.json`` at the repo root,
+    stamped with provenance (``git_sha``, ``timestamp``)."""
+    payload = dict(payload,
+                   git_sha=_git_sha(),
+                   timestamp=datetime.now(timezone.utc).isoformat())
     path = REPO_ROOT / f"BENCH_{name}.json"
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"wrote {path.name}")

@@ -133,7 +133,8 @@ def main() -> None:
     peers = EndpointRegistry.local_peers(tmp.name, 2).peers()
     disagg = DisaggregatedEngine(
         cfg, state["params"],
-        ServeConfig(**base, disaggregate=True, disagg_route=args.route),
+        ServeConfig(**base, engine_mode="disaggregated",
+                    disagg_route=args.route),
         handoff_endpoints=[BlobEndpoint(p) for p in peers])
     assert disagg.cache_bytes() == single.cache_bytes(), \
         "decode-side cache memory must match between modes"

@@ -9,10 +9,10 @@ from typing import Optional, Tuple
 class EngineMode(str, enum.Enum):
     """Which serve engine ``repro.serve.make_engine`` builds.
 
-    Replaces the old boolean sprawl (``paged=...``, ``disaggregate=...``):
-    one request path, five implementations of increasing distribution —
-    fixed-batch baseline, continuous batching, paged KV-cache, disaggregated
-    prefill/decode, and the multi-replica cluster."""
+    One request path, five implementations of increasing distribution —
+    fixed-batch baseline, continuous batching, backend-managed cache
+    (paged KV or snapshot pool, per arch), disaggregated prefill/decode,
+    and the multi-replica cluster."""
     FIXED = "fixed"
     CONTINUOUS = "continuous"
     PAGED = "paged"
@@ -113,20 +113,23 @@ class ServeConfig:
     num_pages: int = 0               # pool size; 0 -> full residency for
     #                                  every slot (max_batch * pages_per_seq)
     prefix_cache: bool = True        # hash-keyed prefix page sharing (CoW)
-    cold_pages: int = 256            # host-tier spill capacity (pages);
-    #                                  0 disables the tiered-memory plane
+    cold_pages: int = 256            # host-tier spill capacity (pages for
+    #                                  the paged backend, snapshots for the
+    #                                  snapshot backend); 0 disables the
+    #                                  tiered-memory plane
+    # Snapshot pool (SnapshotBackend, recurrent/SWA archs): hot LRU capacity
+    # for whole decode-state snapshots reused as prefix donors.
+    snapshot_slots: int = 8
     # Disaggregated prefill/decode serving (DisaggregatedEngine): prefill
-    # runs on a second engine endpoint; KV pages come back as a handoff
+    # runs on a second engine endpoint; decode state comes back as a handoff
     # blob hash-sharded over peer endpoints.
-    disaggregate: bool = False       # DEPRECATED: use engine_mode
     disagg_route: str = "auto"       # "auto" (cost model per request) |
     #                                  "remote" | "local" (forced)
     prefill_slots: int = 2           # prefill-endpoint slot count
     prefill_pages: int = 0           # prefill-endpoint pool pages (0 -> full
     #                                  residency, like num_pages)
     handoff_shards: int = 2          # ShardedStore endpoints for handoffs
-    # Engine selection (EngineMode): "" -> derived from the legacy booleans
-    # above ("continuous" when none are set).  New code sets this instead.
+    # Engine selection (EngineMode): "" -> "continuous".
     engine_mode: str = ""
     # Multi-replica serve cluster (ServeCluster, engine_mode="cluster"):
     # N decode replicas (each a PagedEngine) behind a cost-model router.

@@ -69,8 +69,12 @@ class ReplicaSignals:
     free_slots: int                   # decode slots not occupied
     queue_depth: int                  # requests already waiting there
     max_slots: int
-    free_pages: int                   # KV pool pages allocatable now
-    hit_pages: int = 0                # leading prompt pages resident (hot/cold)
+    free_pages: int                   # cache units allocatable now
+    hit_pages: int = 0                # affinity units resident (hot/cold)
+    # Exact resident-prefix tokens when the backend reports them directly
+    # (snapshot backends: one hit "unit" can cover an arbitrary prefix
+    # length); -1 means derive from hit_pages * page_size (paged backends).
+    hit_tokens: int = -1
     alive: bool = True
 
 
@@ -150,8 +154,11 @@ class CostModel:
         resident there — affinity makes hit-heavy replicas cheap), queue
         wait (each queued request admits first, a full prompt's prefill
         each), and occupancy/page-pressure penalties for work that would
-        land behind evictions or deferrals rather than in a free slot."""
-        hit_tokens = min(r.hit_pages * page_size, prompt_tokens)
+        land behind evictions or deferrals rather than in a free slot.
+        Affinity tokens come from ``hit_tokens`` when the backend reports
+        them exactly; otherwise from ``hit_pages`` at page granularity."""
+        hit_tokens = min(r.hit_tokens if r.hit_tokens >= 0
+                         else r.hit_pages * page_size, prompt_tokens)
         per_tok = flops_per_token / self.p.accel_flops
         suffix = max(prompt_tokens - hit_tokens, 1) * per_tok
         wait = r.queue_depth * prompt_tokens * per_tok

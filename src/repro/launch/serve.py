@@ -9,14 +9,14 @@ batch and reports per-request TTFT plus aggregate throughput.
 
 Engine selection is one axis: ``--engine-mode
 {fixed,continuous,paged,disaggregated,cluster}`` (see
-``repro.serve.make_engine``).  The old ``--paged`` / ``--disaggregate``
-booleans still work for one release and warn.
+``repro.serve.make_engine``).  Every mode covers every arch: paged /
+disaggregated / cluster pick their cache backend per arch (block-table KV
+paging or the recurrent snapshot pool).
 """
 from __future__ import annotations
 
 import argparse
 import time
-import warnings
 
 import jax
 import numpy as np
@@ -50,24 +50,9 @@ def main() -> None:
                     choices=("auto", "remote", "local"),
                     help="prefill routing: cost model per request (auto) "
                          "or forced (engine-mode=disaggregated)")
-    # Legacy engine selectors, kept one release:
-    ap.add_argument("--paged", action="store_true",
-                    help="DEPRECATED: use --engine-mode paged")
-    ap.add_argument("--disaggregate", action="store_true",
-                    help="DEPRECATED: use --engine-mode disaggregated")
     args = ap.parse_args()
 
     mode = args.engine_mode
-    if not mode and args.paged:
-        warnings.warn("--paged is deprecated; use --engine-mode paged",
-                      DeprecationWarning, stacklevel=2)
-        mode = EngineMode.PAGED.value
-    if not mode and args.disaggregate:
-        warnings.warn(
-            "--disaggregate is deprecated; use --engine-mode disaggregated",
-            DeprecationWarning, stacklevel=2)
-        mode = EngineMode.DISAGGREGATED.value
-
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

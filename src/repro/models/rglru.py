@@ -127,3 +127,10 @@ def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
         "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, cfg.rglru_width),
                           jnp.float32),
     }
+
+
+def rglru_state_nbytes(cfg: ModelConfig) -> int:
+    """Bytes of one slot's RG-LRU state (h + conv carry, f32) — the O(1)
+    snapshot/handoff transfer unit per rglru layer, independent of sequence
+    length."""
+    return 4 * (cfg.rglru_width + (cfg.rglru_conv_width - 1) * cfg.rglru_width)

@@ -229,3 +229,12 @@ def init_rwkv6_state(cfg: ModelConfig, batch: int) -> dict:
         "S": jnp.zeros((batch, H, N, N), jnp.float32),
         "x_prev": jnp.zeros((batch, cfg.d_model), jnp.float32),
     }
+
+
+def rwkv6_state_nbytes(cfg: ModelConfig) -> int:
+    """Bytes of one slot's time-mix state (S + x_prev, f32) — the O(1)
+    snapshot/handoff transfer unit per rwkv6 layer, independent of sequence
+    length (vs. a KV page's page_size x d scaling)."""
+    N = cfg.rwkv_head_size
+    H = cfg.d_model // N
+    return 4 * (H * N * N + cfg.d_model)

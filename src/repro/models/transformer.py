@@ -15,6 +15,7 @@ their own unstacked "tail" params.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -151,16 +152,55 @@ def insert_decode_slot(state: Dict[str, Any], solo: Dict[str, Any],
     return out
 
 
+def read_decode_slot(state: Dict[str, Any], slot) -> Dict[str, Any]:
+    """Inverse of :func:`insert_decode_slot`: slice row ``slot`` of a batched
+    decode state back out as a batch-1 solo state (same tree, batch dim kept).
+
+    This is the snapshot half of the recurrent-state pool: a slot's fixed-size
+    state (rwkv6 ``S``/``x_prev``, rglru ``h``/``conv``, SWA ring caches) is
+    captured between decode steps for prefix reuse, spill, or handoff, then
+    spliced back with ``insert_decode_slot``.  ``slot`` may be a traced int32
+    scalar.
+    """
+    def take(axis):
+        def f(a):
+            start = [0] * a.ndim
+            start[axis] = slot
+            size = list(a.shape)
+            size[axis] = 1
+            return jax.lax.dynamic_slice(a, tuple(start), tuple(size))
+        return f
+
+    out: Dict[str, Any] = {
+        "slots": (jax.tree.map(take(1), state["slots"])
+                  if state["slots"] else {}),
+        "tail": jax.tree.map(take(0), state["tail"]),
+        "pos": state["pos"],
+    }
+    if "enc_out" in state:
+        out["enc_out"] = take(0)(state["enc_out"])
+    return out
+
+
+def decode_state_nbytes(cfg: ModelConfig, capacity: int) -> int:
+    """Bytes of one slot's decode state (the snapshot/handoff transfer unit
+    for non-paged archs) — computed via ``eval_shape``, no allocation."""
+    tree = jax.eval_shape(lambda: init_decode_state(cfg, 1, capacity))
+    return sum(math.prod(a.shape) * a.dtype.itemsize
+               for a in jax.tree.leaves(tree))
+
+
 # ----------------------------------------------------------------------------
 # Paged decode state (block-table KV paging; see serve.kvpool for the
 # host-side allocator and serve.engine.PagedEngine for the admission plane)
 # ----------------------------------------------------------------------------
 
 def supports_paging(cfg: ModelConfig) -> bool:
-    """Paging covers global-attention decoder-only archs.  Recurrent mixers
-    and SWA ring caches keep the exact-prefill dense path (their O(1)/ring
-    state has no page structure to share), enc-dec and VLM frontends carry
-    non-pageable per-slot memory."""
+    """Block-table KV paging covers global-attention decoder-only archs.
+    Recurrent mixers and SWA ring caches have O(1)/ring state with no page
+    structure to share, and enc-dec / VLM frontends carry non-pageable
+    per-slot memory — those archs serve through the snapshot-pool backend
+    (``serve.backends.SnapshotBackend``) instead."""
     return (all(k == MIX_ATTN for k in cfg.pattern)
             and not cfg.is_encoder_decoder
             and cfg.mlp_kind != "rwkv_cmix"

@@ -7,12 +7,17 @@ Module layout (the public API):
   * ``programs``  — the four fused fixed-shape device programs (dense/paged
     x admit/decode), cached process-wide so replicas share compilations.
   * ``engines``   — ``ContinuousEngine`` (default, alias ``ServeEngine``),
-    ``PagedEngine`` (paged tiered KV-cache + prefix CoW), and the
+    ``PagedEngine`` (backend-managed decode cache), and the
     ``FixedBatchEngine`` baseline.
+  * ``backends``  — the ``CacheBackend`` layer under ``PagedEngine``:
+    ``PagedKVBackend`` (block-table KV paging + prefix CoW, global-attention
+    archs) and ``SnapshotBackend`` (whole-state snapshot pool,
+    recurrent/SWA archs), picked per arch by ``make_backend``.
   * ``disagg``    — ``PrefillWorker`` / ``DisaggregatedEngine``: prefill and
-    decode as two endpoints with a ``KVHandoff`` blob between them.
-  * ``cluster``   — ``ServeCluster``: N decode replicas behind a cost-model
-    router with prefix affinity and per-tenant QoS (``TenantSpec``).
+    decode as two endpoints with a handoff blob between them.
+  * ``cluster``   — ``ServeCluster``: N decode replicas per model group
+    behind a cost-model router with prefix affinity and per-tenant QoS
+    (``TenantSpec``).
   * ``factory``   — ``make_engine(cfg, params, scfg)`` keyed on
     ``repro.config.EngineMode``.
   * ``sampler`` / ``kvpool`` — sampling params/programs and the paged
@@ -22,6 +27,9 @@ Module layout (the public API):
 layout.
 """
 from repro.config.run import EngineMode
+from repro.serve.backends import (
+    CacheBackend, make_backend, PagedKVBackend, SnapshotBackend,
+    SnapshotHandoff)
 from repro.serve.cluster import ServeCluster, TenantSpec, TokenBucket
 from repro.serve.disagg import DisaggregatedEngine, PrefillWorker
 from repro.serve.engines import (
@@ -31,12 +39,15 @@ from repro.serve.kvpool import KVBlockPool, KVHandoff
 from repro.serve.router import ClusterRouter
 from repro.serve.sampler import SamplingParams
 from repro.serve.scheduler import (
-    needs_exact_prefill, QueueFull, Request, Scheduler, SlotTable)
+    needs_exact_prefill, normalize_stop, QueueFull, Request, Scheduler,
+    SlotTable)
 
 __all__ = [
-    "ClusterRouter", "ContinuousEngine", "DisaggregatedEngine", "EngineMode",
-    "FixedBatchEngine", "KVBlockPool", "KVHandoff", "PagedEngine",
-    "PrefillWorker", "QueueFull", "Request", "SamplingParams", "Scheduler",
-    "ServeCluster", "ServeEngine", "SlotTable", "TenantSpec", "TokenBucket",
-    "make_engine", "needs_exact_prefill", "resolve_engine_mode",
+    "CacheBackend", "ClusterRouter", "ContinuousEngine",
+    "DisaggregatedEngine", "EngineMode", "FixedBatchEngine", "KVBlockPool",
+    "KVHandoff", "PagedEngine", "PagedKVBackend", "PrefillWorker",
+    "QueueFull", "Request", "SamplingParams", "Scheduler", "ServeCluster",
+    "ServeEngine", "SlotTable", "SnapshotBackend", "SnapshotHandoff",
+    "TenantSpec", "TokenBucket", "make_backend", "make_engine",
+    "needs_exact_prefill", "normalize_stop", "resolve_engine_mode",
 ]

@@ -4,19 +4,25 @@
 device as a new *network endpoint* — for one prefill + one decode pair.
 This module generalizes it to the ROADMAP's "millions of users" shape:
 
-  * **N decode replicas**, each a full ``PagedEngine`` (own slot table, own
-    page pool, own prefix index) — on this container they share one process
-    and one device, on a pod each is its own endpoint; the compiled-program
-    cache (``serve.programs``) means N replicas cost one set of traces.
+  * **N decode replicas per model group**, each a full ``PagedEngine``
+    (own slot table, own cache backend — page pool + prefix index for
+    paged archs, snapshot pool for recurrent/SWA archs) — on this container
+    they share one process and one device, on a pod each is its own
+    endpoint; the compiled-program cache (``serve.programs``) means N
+    replicas cost one set of traces.  ``extra_models`` registers additional
+    (config, params) groups, so one cluster serves transformer and
+    recurrent traffic concurrently; requests name their group via
+    ``submit(..., model=...)``.
   * **A cost-model router** (``serve.router`` over
     ``CostModel.decide_replica``) picks a replica per request from live
-    signals — free pages, batch pressure, queue depth — with **prefix
-    affinity**: the prompt's chain keys are probed against every replica's
-    prefix index, so shared-prefix sessions land where their KV pages
-    already live.
-  * **A shared prefill endpoint** (optional): one ``PrefillWorker`` feeding
-    every replica through per-replica ``KVHandoff`` namespaces
-    (``kv/r{i}/{rid}``) over one hash-sharded blob store.
+    signals — free cache units, batch pressure, queue depth — with
+    **prefix affinity**: the prompt's probe handle (chain keys / snapshot
+    keys) is probed against every replica of its model group, so
+    shared-prefix sessions land where their decode state already lives.
+  * **A shared prefill endpoint per model group** (optional): one
+    ``PrefillWorker`` feeding that group's replicas through per-replica
+    handoff namespaces (``kv/r{i}/{rid}``) over one hash-sharded blob
+    store.
   * **Per-tenant QoS** on admission: token-bucket rate limits (violators get
     ``QueueFull``, never a silent hang), priority classes (paid admits
     before best-effort), and **preemption** — when a paid request finds no
@@ -39,7 +45,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -54,7 +60,7 @@ from repro.serve.engines import PagedEngine
 from repro.serve.kvpool import pack_handoff
 from repro.serve.router import ClusterRouter
 from repro.serve.sampler import SamplingParams
-from repro.serve.scheduler import QueueFull, Request
+from repro.serve.scheduler import normalize_stop, QueueFull, Request
 
 
 BEST_EFFORT = 0         # priority of the preemptible class
@@ -112,6 +118,8 @@ class ClusterRequest:
     max_new_tokens: int
     sampling: SamplingParams
     submitted_at: float
+    model: str = "default"           # model group this request routes within
+    stop: Tuple[Tuple[int, ...], ...] = ()
     output: List[int] = dataclasses.field(default_factory=list)
     replica: int = -1                # current replica index (-1 = queued)
     rid: int = -1                    # rid on that replica
@@ -152,7 +160,9 @@ class ServeCluster:
                  policy: ExecPolicy = ExecPolicy(),
                  tenants: Optional[Sequence[TenantSpec]] = None,
                  profile: Optional[Any] = None,
-                 clock: Callable[[], float] = time.time):
+                 clock: Callable[[], float] = time.time,
+                 extra_models: Optional[
+                     Dict[str, Tuple[ModelConfig, Any]]] = None):
         # time.time, not monotonic: TTFT subtracts this clock's submit stamp
         # from the engines' time.time first-token stamp — same epoch or bust.
         if scfg.num_replicas < 1:
@@ -161,25 +171,43 @@ class ServeCluster:
         self.clock = clock
         self.executor = BackgroundExecutor(
             num_threads=2, max_inflight=8, backpressure="block")
-        rep_scfg = dataclasses.replace(
-            scfg, engine_mode="paged", disaggregate=False)
+        rep_scfg = dataclasses.replace(scfg, engine_mode="paged")
         handoff_eps = [dict() for _ in range(max(1, scfg.handoff_shards))]
         self.handoff_store = ShardedStore(handoff_eps)
-        self.replicas: List[PagedEngine] = [
-            PagedEngine(cfg, params, rep_scfg, policy,
-                        executor=self.executor,
-                        handoff_endpoints=handoff_eps, handoff_ns=f"r{i}/")
-            for i in range(scfg.num_replicas)]
-        self.alive = [True] * scfg.num_replicas
 
+        # Model groups: "default" plus any extras.  Each group gets
+        # scfg.num_replicas replicas; replica indices are global (the
+        # handoff namespace r{i}/ stays unique cluster-wide) and
+        # ``_model_of`` maps a global index back to its group.
+        self.models: Dict[str, Tuple[ModelConfig, Any]] = {
+            "default": (cfg, params)}
+        for name, (mcfg, mparams) in (extra_models or {}).items():
+            if name == "default":
+                raise ValueError(
+                    "extra_models may not rebind the 'default' group")
+            self.models[name] = (mcfg, mparams)
+        self.replicas: List[PagedEngine] = []
+        self._model_of: List[str] = []
+        for name, (mcfg, mparams) in self.models.items():
+            for _ in range(scfg.num_replicas):
+                i = len(self.replicas)
+                self.replicas.append(PagedEngine(
+                    mcfg, mparams, rep_scfg, policy, executor=self.executor,
+                    handoff_endpoints=handoff_eps, handoff_ns=f"r{i}/"))
+                self._model_of.append(name)
+        n_total = len(self.replicas)
+        self.alive = [True] * n_total
+
+        self._prefills: Dict[str, PrefillWorker] = {}
         self.prefill: Optional[PrefillWorker] = None
         if scfg.cluster_prefill:
             pre_scfg = dataclasses.replace(
                 scfg, max_batch=max(1, scfg.prefill_slots),
-                num_pages=scfg.prefill_pages, disaggregate=False,
-                engine_mode="paged")
-            self.prefill = PrefillWorker(cfg, params, pre_scfg, policy,
-                                         executor=self.executor)
+                num_pages=scfg.prefill_pages, engine_mode="paged")
+            for name, (mcfg, mparams) in self.models.items():
+                self._prefills[name] = PrefillWorker(
+                    mcfg, mparams, pre_scfg, policy, executor=self.executor)
+            self.prefill = self._prefills["default"]
 
         n_params = sum(int(x.size) for x in jax.tree.leaves(params))
         self.router = ClusterRouter(flops_per_token=2.0 * n_params,
@@ -197,12 +225,12 @@ class ServeCluster:
         self._pending: List[ClusterRequest] = []      # cluster-level queue
         self._inflight: Dict[int, ClusterRequest] = {}  # crid -> dispatched
         self._by_replica: List[Dict[int, ClusterRequest]] = [
-            {} for _ in range(scfg.num_replicas)]     # rid -> cr, per replica
+            {} for _ in range(n_total)]               # rid -> cr, per replica
         self._results: Dict[int, Dict[str, Any]] = {}
-        self.max_pending = scfg.max_queue * scfg.num_replicas
+        self.max_pending = scfg.max_queue * n_total
 
         # Endpoint busy accounting for the parallel-world wall clock.
-        self.busy_s = [0.0] * scfg.num_replicas
+        self.busy_s = [0.0] * n_total
         self.prefill_busy_s = 0.0
         # QoS / lifecycle counters.
         self.preemptions = 0
@@ -213,12 +241,19 @@ class ServeCluster:
 
     # -- admission -------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, tenant: str = "default",
-               sampling: Optional[SamplingParams] = None) -> int:
-        """Enqueue one request under a tenant's QoS contract.  Raises
-        ``QueueFull`` when the tenant is over its rate limit or the cluster
-        queue is at capacity — callers get backpressure, never a hang."""
+               sampling: Optional[SamplingParams] = None,
+               model: str = "default", stop=None) -> int:
+        """Enqueue one request under a tenant's QoS contract.  ``model``
+        names the group it routes within; ``stop`` is a token-id stop
+        sequence (or list of them) checked host-side after every decode
+        step.  Raises ``QueueFull`` when the tenant is over its rate limit
+        or the cluster queue is at capacity — callers get backpressure,
+        never a hang."""
         if self._closed:
             raise RuntimeError("cluster is closed; no new submissions")
+        if model not in self.models:
+            raise ValueError(
+                f"unknown model group {model!r}; have {sorted(self.models)}")
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim != 1 or prompt.size == 0:
             raise ValueError("prompt must be a non-empty 1-D token array")
@@ -240,7 +275,8 @@ class ServeCluster:
                 f"cluster queue full ({self.max_pending}); retry after step()")
         cr = ClusterRequest(next(self._crid), spec, prompt, max_new_tokens,
                             sampling or SamplingParams.from_config(self.scfg),
-                            submitted_at=self.clock())
+                            submitted_at=self.clock(), model=model,
+                            stop=normalize_stop(stop))
         self._pending.append(cr)
         return cr.crid
 
@@ -270,7 +306,7 @@ class ServeCluster:
             # request): when no live replica has slot headroom, only paid
             # requests — which can make room by preemption — are worth
             # scoring; best-effort waits for a decode completion.
-            if cr.tenant.preemptible and not self._any_room():
+            if cr.tenant.preemptible and not self._any_room(cr.model):
                 remaining.append(cr)
                 continue
             if self._dispatch_one(cr):
@@ -280,18 +316,27 @@ class ServeCluster:
         self._pending = remaining
         return dispatched
 
-    def _any_room(self) -> bool:
-        return any(self.alive[i]
+    def _any_room(self, model: str) -> bool:
+        return any(self.alive[i] and self._model_of[i] == model
                    and rep.slots.free_count() > rep.scheduler.depth()
                    for i, rep in enumerate(self.replicas))
 
     def _dispatch_one(self, cr: ClusterRequest) -> bool:
+        if _stop_hit_index(cr.output, cr.stop) is not None:
+            # A stop sequence completed across admission rounds (it can
+            # straddle a preemption boundary); _finish truncates.
+            self._finish(cr)
+            return True
         prompt, max_new = cr.continuation()
         if max_new <= 0:            # budget already spent pre-withdrawal
             self._finish(cr)
             return True
+        # Route only within the request's model group: a replica holding
+        # different weights is as unusable as a dead one.
+        mask = [self.alive[i] and self._model_of[i] == cr.model
+                for i in range(len(self.replicas))]
         idx, decision, _ = self.router.pick(
-            cr.crid, prompt, max_new, self.replicas, self.alive)
+            cr.crid, prompt, max_new, self.replicas, mask)
         if idx < 0:
             cr.error = decision.rationale       # no live replica: terminal
             self._finish(cr)
@@ -317,15 +362,16 @@ class ServeCluster:
                    max_new: int) -> Optional[int]:
         rep = self.replicas[idx]
         try:
-            rid = rep.submit(prompt, max_new, sampling=cr.sampling)
+            rid = rep.submit(prompt, max_new, sampling=cr.sampling,
+                             stop=cr.stop)
         except QueueFull:
             return None
-        if self.prefill is not None:
+        prefill = self._prefills.get(cr.model)
+        if prefill is not None:
             t0 = time.perf_counter()
-            h = self.prefill.prefill_to_handoff(rid, prompt, max_new,
-                                                cr.sampling)
+            h = prefill.prefill_to_handoff(rid, prompt, max_new, cr.sampling)
             self.prefill_busy_s += time.perf_counter() - t0
-            if h is not None:       # worker out of pages -> local prefill
+            if h is not None:       # worker out of capacity -> local prefill
                 self.handoff_store.put(f"kv/r{idx}/{rid}", pack_handoff(h))
         return rid
 
@@ -430,6 +476,9 @@ class ServeCluster:
         self.handoff_store.drop_prefix(f"kv/r{idx}/")
 
     def _finish(self, cr: ClusterRequest) -> None:
+        cut = _stop_hit_index(cr.output, cr.stop)
+        if cut is not None:
+            del cr.output[cut:]     # inclusive of the stop sequence itself
         cr.finished_at = self.clock()
         payload = {
             "crid": cr.crid,
@@ -480,7 +529,8 @@ class ServeCluster:
         return {
             "replicas": [
                 dict(rep.stats(), alive=self.alive[i],
-                     busy_s=round(self.busy_s[i], 4))
+                     busy_s=round(self.busy_s[i], 4),
+                     model=self._model_of[i])
                 for i, rep in enumerate(self.replicas)],
             "pending": len(self._pending),
             "inflight": len(self._inflight),
@@ -513,21 +563,23 @@ class ServeCluster:
         self._inflight.clear()
         for rep in self.replicas:
             rep.close()
-        if self.prefill is not None:
-            self.prefill.close()
+        for worker in self._prefills.values():
+            worker.close()
         self.executor.drain()
         self.executor.shutdown(drain=False)
 
     # -- batch convenience ----------------------------------------------------
     def generate(self, prompts: List[np.ndarray], max_new_tokens: int,
-                 tenant: str = "default") -> Dict[int, List[int]]:
+                 tenant: str = "default",
+                 model: str = "default") -> Dict[int, List[int]]:
         """Submit a list of prompts and drive to completion.  Returns
         {index -> tokens}."""
         crids = []
         for p in prompts:
             while True:
                 try:
-                    crids.append(self.submit(p, max_new_tokens, tenant))
+                    crids.append(self.submit(p, max_new_tokens, tenant,
+                                             model=model))
                     break
                 except QueueFull:
                     self.step()
@@ -541,3 +593,18 @@ def rep_req_done(rep: PagedEngine, rid: int) -> bool:
         return rep.request(rid).done
     except KeyError:
         return False
+
+
+def _stop_hit_index(tokens: Sequence[int], stop) -> Optional[int]:
+    """Index one past the end of the *earliest* completed stop sequence in
+    ``tokens``, or None.  Cluster-level rescan: a stop sequence can straddle
+    a preemption/requeue boundary, where neither admission round's engine
+    sees the whole thing."""
+    best = None
+    for seq in stop:
+        n = len(seq)
+        for i in range(n, len(tokens) + 1):
+            if tuple(tokens[i - n:i]) == seq:
+                best = i if best is None else min(best, i)
+                break
+    return best

@@ -13,10 +13,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config.model import ModelConfig
@@ -26,7 +25,7 @@ from repro.core.executor import BackgroundExecutor
 from repro.core.planner import PrefillRoutePlanner
 from repro.models.transformer import ExecPolicy
 from repro.serve.engines import PagedEngine
-from repro.serve.kvpool import KVHandoff, chain_keys, pack_handoff
+from repro.serve.kvpool import pack_handoff
 from repro.serve.sampler import SamplingParams
 from repro.serve.scheduler import Request
 
@@ -34,40 +33,32 @@ from repro.serve.scheduler import Request
 class PrefillWorker(PagedEngine):
     """The *prefill endpoint* of a disaggregated serve plane.
 
-    A full ``PagedEngine`` (own page pool, own prefix index, own cold tier)
-    that only ever runs the fused bucket-prefill/admit program: instead of
-    joining a decode batch, the freshly-computed KV pages are sliced out of
-    the pool (``read_page``), staged to host memory, and returned as a
-    transferable ``KVHandoff``.  The slot and pages are released
-    immediately — full prompt pages stay behind in the prefix index, so
-    prompts sharing a prefix are prefilled once per *endpoint*, not once per
-    request."""
+    A full ``PagedEngine`` (own cache backend: page pool + prefix index for
+    paged archs, snapshot pool for recurrent/SWA archs) that only ever runs
+    the fused prefill/admit program: instead of joining a decode batch, the
+    freshly-computed decode state is exported through the backend as a
+    transferable handoff blob (``KVHandoff`` pages / ``SnapshotHandoff``
+    state tree).  The slot (and pages) are released immediately — reusable
+    state stays behind in the backend's prefix cache, so prompts sharing a
+    prefix are prefilled once per *endpoint*, not once per request."""
 
     def prefill_to_handoff(self, rid: int, prompt: np.ndarray,
                            max_new_tokens: int,
-                           sampling: SamplingParams) -> Optional[KVHandoff]:
-        """Bucket-prefill ``prompt`` and export its KV pages.  Returns None
-        when this endpoint is out of pages (the caller prefills locally)."""
-        # max_new_tokens=1 on the worker request: allocate only the pages
-        # the prompt (plus the sampled first token's logical page) covers —
-        # the decode endpoint owns the decode-horizon pages.
+                           sampling: SamplingParams) -> Optional[Any]:
+        """Prefill ``prompt`` and export its decode state.  Returns None
+        when this endpoint is out of resources (the caller prefills
+        locally)."""
+        # max_new_tokens=1 on the worker request: allocate only what the
+        # prompt (plus the sampled first token's logical page) covers —
+        # the decode endpoint owns the decode-horizon resources.
         req = Request(next(self._rid), np.asarray(prompt, np.int32), 1,
                       sampling)
         tok0 = self._admit_one(req)
         if tok0 is None:
             return None
-        pg = self.page_size
-        n_prompt = -(-len(req.prompt) // pg)
-        blobs = [jax.device_get(self._read_page_prog(
-                     self.states, jnp.asarray(p, jnp.int32)))
-                 for p in req.pages[:n_prompt]]
-        handoff = KVHandoff(
-            rid=rid, prompt_len=len(req.prompt),
-            max_new_tokens=max_new_tokens, first_token=tok0,
-            page_blobs=blobs, chains=chain_keys(req.prompt, pg),
-            sampling=dataclasses.asdict(req.sampling))
-        self._release_slot(req.slot)        # pages unref'd; full prompt
-        return handoff                      # pages stay prefix-cached
+        handoff = self.backend.export_handoff(req, rid, max_new_tokens, tok0)
+        self._release_slot(req.slot)        # resources given back; reusable
+        return handoff                      # state stays prefix-cached
 
 
 class DisaggregatedEngine(PagedEngine):
@@ -96,8 +87,10 @@ class DisaggregatedEngine(PagedEngine):
     training plane's.  On this container both endpoints live in one
     process; the handoff blob is the deliberately narrow interface, exactly
     how ``core.endpoint`` abstracts peers.  The handoff *import* half lives
-    on ``PagedEngine`` itself (``_import_handoff``), so cluster replicas
-    consume the same blobs without being this class."""
+    on the cache backend (``CacheBackend.import_handoff``), so cluster
+    replicas consume the same blobs without being this class — and
+    recurrent/SWA archs disaggregate through ``SnapshotHandoff`` blobs with
+    no change here."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  policy: ExecPolicy = ExecPolicy(),
@@ -112,14 +105,12 @@ class DisaggregatedEngine(PagedEngine):
                          result_endpoints, handoff_endpoints=endpoints)
         pre_scfg = dataclasses.replace(
             scfg, max_batch=max(1, scfg.prefill_slots),
-            num_pages=scfg.prefill_pages, disaggregate=False)
+            num_pages=scfg.prefill_pages)
         self.prefill = PrefillWorker(cfg, params, pre_scfg, policy,
                                      executor=self.executor)
         n_params = sum(int(x.size) for x in jax.tree.leaves(params))
         self.router = PrefillRoutePlanner(flops_per_token=2.0 * n_params,
                                           profile=profile)
-        # Decode-side bytes one handoff page carries (the link-cost input).
-        self._page_bytes = self.cache_bytes() / max(1, self.pool.num_pages)
         self.prefill_seconds = 0.0      # time spent on the other endpoint
         # rid -> routing decision, so a deferred admission retries with the
         # same placement instead of re-deciding (and re-counting) each
@@ -133,9 +124,8 @@ class DisaggregatedEngine(PagedEngine):
             self.router.note_forced(req.rid, mode == "remote",
                                     f"disagg_route={mode!r}")
             return mode == "remote"
-        n_pages = -(-len(req.prompt) // self.page_size)
         d = self.router.route(req.rid, len(req.prompt),
-                              n_pages * self._page_bytes,
+                              self.backend.handoff_bytes_for(len(req.prompt)),
                               len(self.slots.active()), self.scfg.max_batch)
         return d.placement == Placement.SIDECAR_ASYNC
 

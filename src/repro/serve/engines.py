@@ -23,11 +23,10 @@ benchmark baseline (``benchmarks/serve_continuous.py``).
 """
 from __future__ import annotations
 
-import functools
 import itertools
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,15 +36,14 @@ from repro.config.model import ModelConfig
 from repro.config.run import ServeConfig
 from repro.core.endpoint import ShardedStore
 from repro.core.executor import BackgroundExecutor
-from repro.models.transformer import (
-    ExecPolicy, init_decode_state, init_paged_decode_state, supports_paging)
+from repro.models.transformer import ExecPolicy, init_decode_state
 from repro.serve import programs
-from repro.serve.kvpool import (
-    SCRATCH_PAGE, ColdTier, KVBlockPool, KVHandoff, chain_keys,
-    unpack_handoff)
+from repro.serve.backends import make_backend
+from repro.serve.kvpool import unpack_handoff
 from repro.serve.sampler import SamplingParams, sample
 from repro.serve.scheduler import (
-    needs_exact_prefill, QueueFull, Request, Scheduler, SlotTable)
+    hit_stop, needs_exact_prefill, normalize_stop, QueueFull, Request,
+    Scheduler, SlotTable)
 from repro.train.steps import make_decode_step, make_prefill_step
 
 
@@ -125,7 +123,8 @@ class ContinuousEngine:
     # -- request lifecycle ----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
                sampling: Optional[SamplingParams] = None,
-               frontend_embeds: Optional[np.ndarray] = None) -> int:
+               frontend_embeds: Optional[np.ndarray] = None,
+               stop=None) -> int:
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim != 1 or prompt.size == 0:
             raise ValueError("prompt must be a non-empty 1-D token array")
@@ -140,7 +139,8 @@ class ContinuousEngine:
                 f"exceeds max_seq_len ({self.scfg.max_seq_len})")
         req = Request(next(self._rid), prompt, max_new_tokens,
                       sampling or SamplingParams.from_config(self.scfg),
-                      frontend_embeds=frontend_embeds)
+                      frontend_embeds=frontend_embeds,
+                      stop=normalize_stop(stop))
         # Atomic against _fail_pending's teardown so a request can never
         # slip into the queue after close() already failed everything.
         with self._admission:
@@ -195,7 +195,8 @@ class ContinuousEngine:
             self._eos[slot] = sp.eos_id
             self._host_temps[slot] = sp.temperature
             if (sp.eos_id >= 0 and tok0 == sp.eos_id) \
-                    or req.max_new_tokens <= 1:
+                    or req.max_new_tokens <= 1 \
+                    or hit_stop(req.output, req.stop):
                 self._release_slot(slot)  # finished during admission
                 self._finish(req)
         return admitted
@@ -254,7 +255,10 @@ class ContinuousEngine:
             with self._lock:
                 self._tokens_out += 1
             if (self._eos[slot] >= 0 and tok == self._eos[slot]) \
-                    or len(req.output) >= req.max_new_tokens:
+                    or len(req.output) >= req.max_new_tokens \
+                    or hit_stop(req.output, req.stop):
+                # Stop sequences finish inclusively: the matched tokens stay
+                # in the output (callers strip them if they want clean text).
                 self._release_slot(slot)
                 self._finish(req)
         with self._lock:
@@ -438,35 +442,32 @@ ServeEngine = ContinuousEngine
 
 
 class PagedEngine(ContinuousEngine):
-    """Continuous batching over a paged, tiered KV-cache.
+    """Continuous batching over a pluggable decode-state backend.
 
     The dense engine allocates ``max_batch x max_seq_len`` cache rows up
     front — worst-case memory per slot, no sharing, nothing ever cools.
-    This engine replaces that with the paper's endpoint-expansion plane:
+    This engine keeps the same admission plane but delegates all cache
+    management to a ``serve.backends.CacheBackend``, picked per arch by
+    ``make_backend``:
 
-      * **Pages** — each attention layer holds one physical page pool
-        (``init_paged_decode_state``); a host-side block table maps each
-        slot's logical pages to pool pages, so resident memory follows the
-        *live token count*, not ``slots x max_seq_len``.
-      * **Prefix reuse (CoW)** — full prompt pages are indexed by rolling
-        content hash (``serve.kvpool``); a request whose prompt shares a
-        prefix refs the same physical pages and prefills only its suffix.
-        Shared pages are read-only by construction (decode appends into
-        privately-owned pages), so copy-on-write never actually copies.
-      * **Tiered memory** — pages of reusable prefixes that lose the LRU
-        race under pool pressure are spilled to a host-endpoint ``ColdTier``
-        through the ``BackgroundExecutor`` sidecar (advice #2: management
-        off the critical path) and faulted back on the next prefix hit
-        (advice #3: the DPU/host as a second memory endpoint).
-      * **Handoff import** — when a ``handoff_store`` is attached, admission
-        first checks it for a ``KVHandoff`` blob published under this
-        request's key (by a ``PrefillWorker`` on another endpoint) and
-        faults those pages in instead of prefilling.  This is what lets a
-        ``DisaggregatedEngine`` — or each decode replica of a
-        ``ServeCluster`` — consume remotely-prefilled prompts.
+      * **PagedKVBackend** (all-global-attention decoder-only archs) — the
+        paper's endpoint-expansion plane: a physical page pool per attention
+        layer with a host-side block table (resident memory follows the live
+        token count), rolling-hash CoW prefix reuse, and LRU spill of
+        reusable prefix pages to a host-endpoint ``ColdTier`` via the
+        sidecar (advice #2/#3).
+      * **SnapshotBackend** (recurrent / SWA / enc-dec archs) — per-slot
+        state is a fixed-size tree, so the reuse unit is a whole batch-1
+        state snapshot at a prompt boundary: an LRU snapshot pool with
+        cold-tier spill, and suffix-only resume prefill on a prefix hit.
 
-    Global-attention decoder-only archs only; recurrent/SWA archs keep the
-    dense exact-prefill engine (``supports_paging``).
+    Both backends implement the handoff-import half of disaggregated
+    serving: when a ``handoff_store`` is attached, admission first checks it
+    for a blob published under this request's key (by a ``PrefillWorker`` on
+    another endpoint) and splices that state in instead of prefilling.
+    This is what lets a ``DisaggregatedEngine`` — or each decode replica of
+    a ``ServeCluster`` — consume remotely-prefilled prompts, for every arch
+    in ``configs/``.
     """
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
@@ -475,27 +476,8 @@ class PagedEngine(ContinuousEngine):
                  result_endpoints: Optional[Sequence[Any]] = None,
                  handoff_endpoints: Optional[Sequence[Any]] = None,
                  handoff_ns: str = ""):
-        if not supports_paging(cfg):
-            raise ValueError(
-                f"{cfg.arch_id}: PagedEngine needs an all-global-attention "
-                "decoder-only arch; use ContinuousEngine")
-        if scfg.max_seq_len % scfg.page_size:
-            raise ValueError(f"max_seq_len ({scfg.max_seq_len}) must be a "
-                             f"multiple of page_size ({scfg.page_size})")
+        self.backend = make_backend(cfg, scfg)  # validates page geometry
         self.page_size = scfg.page_size
-        self.pages_per_seq = scfg.max_seq_len // scfg.page_size
-        num_pages = scfg.num_pages or (scfg.max_batch * self.pages_per_seq + 1)
-        if num_pages < self.pages_per_seq + 1:
-            raise ValueError(
-                f"num_pages ({num_pages}) must cover one full sequence "
-                f"({self.pages_per_seq}) plus the scratch page")
-        self.pool = KVBlockPool(num_pages, scfg.page_size,
-                                prefix_cache=scfg.prefix_cache)
-        self.cold = ColdTier(scfg.cold_pages) if scfg.cold_pages > 0 else None
-        self._table = np.full((scfg.max_batch, self.pages_per_seq),
-                              SCRATCH_PAGE, np.int32)
-        self._prompt_tokens = 0
-        self._hit_tokens = 0
         # Handoff-import plane (disaggregated / cluster serving).  The
         # namespace keeps per-replica keys disjoint when several engines
         # share one blob store.
@@ -510,135 +492,34 @@ class PagedEngine(ContinuousEngine):
                          result_endpoints)
 
     def _build_device_plane(self) -> None:
-        cfg, scfg = self.cfg, self.scfg
-        self._admit_prog = programs.paged_admit_program(
-            cfg, self.policy, scfg.max_seq_len)
-        self._decode_prog = programs.paged_decode_program(cfg, self.policy)
-        # Page movers for the tiered plane: slice a page out for spilling
-        # (fresh buffers, safe to stage on the sidecar) / write a faulted
-        # page back in place.
-        self._read_page_prog = programs.read_page_program()
-        self._write_page_prog = programs.write_page_program()
-        self.states = init_paged_decode_state(cfg, self.pool.num_pages,
-                                              self.page_size)
+        # The backend owns the fused programs and the decode-state layout;
+        # binding happens here because the backend's programs need
+        # ``self.policy`` and its state allocation sets ``self.states``.
+        self.backend.bind(self)
+        self.backend.build_device_plane()
 
-    # -- tiered-memory plane ---------------------------------------------------
-    def _spill(self, page: int, chain: bytes) -> None:
-        """Evict a cached prefix page: slice its K/V out of every pool into
-        the cold tier, then let the sidecar stage the slices to host memory
-        (``ColdTier.replace``).  The slice is enqueued on the device stream
-        *before* any later program can reuse the page, so the handoff is
-        race-free; the decode loop never blocks on the device->host copy
-        (advice #2), and a failed/dropped staging task just leaves the
-        device slices in place — never a dangling entry."""
-        if self.cold is None:
-            return
-        blob = self._read_page_prog(self.states, jnp.asarray(page, jnp.int32))
-        self.cold.put(chain, blob)
-        leaves, treedef = jax.tree.flatten(blob)
-        self.executor.submit(
-            f"kv.spill/{chain.hex()[:8]}",
-            functools.partial(self._cold_stage, chain, treedef), *leaves)
+    # -- backend pass-throughs (compat with pre-backend callers/tests) ---------
+    @property
+    def pool(self):
+        """The backend's cache substrate (``KVBlockPool`` / ``SnapshotPool``)."""
+        return self.backend.pool
 
-    def _cold_stage(self, chain: bytes, treedef, *host_leaves) -> None:
-        # Runs on the sidecar after jax.device_get of every leaf: the cold
-        # entry becomes true host-endpoint memory.
-        self.cold.replace(chain, jax.tree.unflatten(treedef, list(host_leaves)))
+    @property
+    def cold(self):
+        """The backend's cold tier (or None)."""
+        return self.backend.cold
 
-    def _fault_in(self, chain: bytes) -> Optional[int]:
-        """Bring a cold prefix page back into the pool.  Returns the hot
-        page (ref'd for the caller) or None on a miss / full pool."""
-        if self.cold is None or not self.cold.contains(chain):
-            return None
-        blob = self.cold.take(chain)
-        if blob is None:
-            return None
-        got = self.pool.alloc(1, evict_cb=self._spill)
-        if got is None:
-            self.cold.put(chain, blob)          # no room: stay cold
-            return None
-        page = got[0]
-        self.states = self._write_page_prog(
-            self.states, jnp.asarray(page, jnp.int32), blob)
-        self.pool.register(chain, page)
-        self.pool.faults += 1
-        return page
-
-    # -- admission -------------------------------------------------------------
-    def _match_prefix(self, req: Request,
-                      chains: List[bytes]) -> List[int]:
-        """Longest chain of *full* prompt pages already resident (hot hit)
-        or spilled (cold fault-in).  Always leaves >= 1 token to prefill so
-        the admit program has a real last-token logit to sample from."""
-        pg = self.page_size
-        limit = (len(req.prompt) - 1) // pg
-        pages: List[int] = []
-        for chain in chains[:limit]:
-            page = self.pool.lookup(chain)
-            if page is not None:
-                self.pool.ref(page)
-                pages.append(page)
-                continue
-            page = self._fault_in(chain)        # alloc() already ref'd it
-            if page is None:
-                break
-            pages.append(page)
-        return pages
-
-    def prefix_hits(self, chains: List[bytes]) -> int:
-        """Leading chain keys resident on this engine (hot index or cold
-        tier), *without* mutating LRU order or hit counters — the cluster
-        router's affinity probe."""
-        n = 0
-        for chain in chains:
-            if self.pool.probe(chain) or \
-                    (self.cold is not None and self.cold.contains(chain)):
-                n += 1
-            else:
-                break
-        return n
+    def prefix_hits(self, chains) -> int:
+        """Affinity units already resident here, without LRU side effects
+        (pages for the paged backend, matched snapshots otherwise)."""
+        return self.backend.probe(chains)[0]
 
     def can_admit(self, prompt_len: int, max_new_tokens: int,
                   hit_pages: int = 0) -> bool:
         if self.slots.free_count() <= self.scheduler.depth():
             return False
-        need = -(-(prompt_len + max_new_tokens) // self.page_size)
-        return self.pool.available() >= max(0, need - hit_pages)
-
-    def _register_prefix(self, req: Request, chains: List[bytes],
-                         pages: List[int], n_hit: int) -> None:
-        """Index the freshly-prefilled full prompt pages for future sharing."""
-        for i in range(n_hit, len(req.prompt) // self.page_size):
-            self.pool.register(chains[i], pages[i])
-
-    def _reserve_pages(self, req: Request, chains: List[bytes],
-                       need: int) -> Optional[Tuple[List[int], int]]:
-        """Shared admission half: prefix-match (hot hit or cold fault-in),
-        allocate the remainder, update hit accounting.  Returns
-        ``(pages, n_hit)``, or None when admission must defer — hit refs are
-        rolled back so decode can free pages in the meantime."""
-        hit_pages = self._match_prefix(req, chains)
-        n_hit = len(hit_pages)
-        new_pages = self.pool.alloc(need - n_hit, evict_cb=self._spill)
-        if new_pages is None:                   # pool exhausted by live slots:
-            for p in hit_pages:                 # defer; decode will free pages
-                self.pool.unref(p)
-            return None
-        pages = hit_pages + new_pages
-        req.pages = pages
-        req.prefix_hit_tokens = n_hit * self.page_size
-        with self._lock:
-            self._prompt_tokens += len(req.prompt)
-            self._hit_tokens += n_hit * self.page_size
-        return pages, n_hit
-
-    def _install_slot(self, req: Request, pages: List[int]) -> int:
-        """Acquire a decode slot and point its block-table row at pages."""
-        slot = self.slots.acquire(req)
-        row = np.full(self.pages_per_seq, SCRATCH_PAGE, np.int32)
-        row[:len(pages)] = pages
-        self._table[slot] = row
-        return slot
+        return self.backend.can_admit_resources(prompt_len, max_new_tokens,
+                                                hit_pages)
 
     def _handoff_key(self, rid: int) -> str:
         return f"kv/{self.handoff_ns}{rid}"
@@ -648,7 +529,7 @@ class PagedEngine(ContinuousEngine):
             key = self._handoff_key(req.rid)
             data = self.handoff_store.pop(key)
             if data is not None:
-                tok0 = self._import_handoff(req, unpack_handoff(data))
+                tok0 = self.backend.import_handoff(req, unpack_handoff(data))
                 if tok0 is None:
                     # Pool exhausted: keep the blob so the deferred-admission
                     # retry imports it instead of re-running the remote
@@ -659,132 +540,23 @@ class PagedEngine(ContinuousEngine):
                 self._remote_admits += 1        # counted once, on success
                 self._handoff_bytes += len(data)
                 return tok0
-        tok0 = self._admit_pages(req)
+        tok0 = self.backend.admit(req)
         if tok0 is not None:
             self._local_admits += 1
         return tok0
 
-    def _admit_pages(self, req: Request) -> Optional[int]:
-        """Local paged admission: prefix-match, allocate, bucket-prefill the
-        suffix through the fused paged admit program."""
-        pg, M = self.page_size, self.pages_per_seq
-        L = len(req.prompt)
-        need = -(-(L + req.max_new_tokens) // pg)
-        chains = (chain_keys(req.prompt, pg) if self.scfg.prefix_cache
-                  else [])
-        got = self._reserve_pages(req, chains, need)
-        if got is None:
-            return None
-        pages, n_hit = got
-        hit_len = n_hit * pg
-
-        slot = self._install_slot(req, pages)
-        row = self._table[slot]
-        # Hit pages scatter to the scratch page (never rewrite shared pages).
-        assign = np.full(M, SCRATCH_PAGE, np.int32)
-        assign[n_hit:len(pages)] = pages[n_hit:]
-
-        suffix = req.prompt[hit_len:]
-        # Clamp the suffix bucket so hit_len + S never wraps the solo cache.
-        S = max(min(self.scheduler.bucket_for(len(suffix)),
-                    self.scfg.max_seq_len - hit_len), len(suffix), 1)
-        toks = np.zeros((1, S), np.int32)
-        toks[0, :len(suffix)] = suffix
-        positions = (hit_len + np.arange(S, dtype=np.int32))[None, :]
-        sp = req.sampling
-        batch = {"tokens": jnp.asarray(toks),
-                 "positions": jnp.asarray(positions),
-                 "length": jnp.asarray(L, jnp.int32),
-                 "hit_len": jnp.asarray(hit_len, jnp.int32),
-                 "table": jnp.asarray(row),
-                 "assign": jnp.asarray(assign),
-                 "slot": jnp.asarray(slot, jnp.int32),
-                 "temp": jnp.asarray(sp.temperature, jnp.float32),
-                 "top_k": jnp.asarray(sp.top_k, jnp.int32),
-                 "top_p": jnp.asarray(sp.top_p, jnp.float32)}
-        self.states, tok, self._key, self._mirrors = self._admit_prog(
-            self.params, self.states, batch, self._key, self._mirrors)
-        if self.scfg.prefix_cache:
-            self._register_prefix(req, chains, pages, n_hit)
-        return int(tok[0])
-
-    def _import_handoff(self, req: Request,
-                        h: KVHandoff) -> Optional[int]:
-        """Fault a handoff's pages into this engine's pool and splice the
-        request into the decode batch — the decode half of the narrow
-        interface.  Pages the local prefix index already holds (hot or
-        cold) are reused instead of imported; imported full prompt pages are
-        registered for future sharing, so both endpoints keep their own
-        working prefix caches."""
-        pg = self.page_size
-        L = h.prompt_len
-        n_prompt = h.num_prompt_pages(pg)
-        # A blob popped at this request's key must actually be *this*
-        # request's: a colliding rid against a persistent handoff store
-        # (relaunch over the same BlobEndpoint directories) would otherwise
-        # splice another prompt's KV pages into the batch silently.
-        if (h.rid != req.rid or L != len(req.prompt)
-                or h.max_new_tokens != req.max_new_tokens
-                or n_prompt != len(h.page_blobs)):
-            raise ValueError(
-                f"stale/malformed handoff at kv/{req.rid}: blob carries "
-                f"rid={h.rid} prompt_len={L} max_new={h.max_new_tokens} "
-                f"({len(h.page_blobs)} page blobs, expected {n_prompt})")
-        need = -(-(L + req.max_new_tokens) // pg)
-        chains = [bytes(c) for c in h.chains] if self.scfg.prefix_cache \
-            else []
-        got = self._reserve_pages(req, chains, need)
-        if got is None:                     # pool exhausted: defer
-            return None
-        pages, n_hit = got
-
-        for i in range(n_hit, n_prompt):            # fault transferred pages
-            self.states = self._write_page_prog(
-                self.states, jnp.asarray(pages[i], jnp.int32),
-                h.page_blobs[i])
-        slot = self._install_slot(req, pages)
-        # The blob's sampling state is the wire-format truth (a cross-host
-        # decode endpoint has no Request object to fall back on).
-        sp = h.sampling
-        m = self._mirrors
-        self._mirrors = {
-            "tok": m["tok"].at[slot].set(h.first_token),
-            "pos": m["pos"].at[slot].set(L),
-            "temp": m["temp"].at[slot].set(float(sp["temperature"])),
-            "top_k": m["top_k"].at[slot].set(int(sp["top_k"])),
-            "top_p": m["top_p"].at[slot].set(float(sp["top_p"])),
-        }
-        if self.scfg.prefix_cache:
-            self._register_prefix(req, chains, pages, n_hit)
-        return int(h.first_token)
-
     # -- decode / release ------------------------------------------------------
     def _decode_device(self) -> np.ndarray:
-        self.states, toks_dev, self._key, self._mirrors = self._decode_prog(
-            self.params, self.states, self._key, self._mirrors,
-            jnp.asarray(self._table))
-        return np.asarray(toks_dev)
+        return self.backend.decode_step()
 
     def _release_slot(self, slot: int) -> None:
-        req = self.slots.get(slot)
-        if req is not None:
-            for p in req.pages:
-                self.pool.unref(p)      # shared pages stay; private ones free
-            req.pages = []
-        # Point the retired row at the scratch page: its mirrors keep
-        # advancing through the fixed-shape decode, and those garbage writes
-        # must never land in a page that gets reallocated.
-        self._table[slot] = SCRATCH_PAGE
+        self.backend.release(self.slots.get(slot), slot)
         super()._release_slot(slot)
 
     def stats(self) -> Dict[str, Any]:
         s = super().stats()
-        with self._lock:
-            hit, prompt = self._hit_tokens, self._prompt_tokens
-        s["kv_pool"] = self.pool.stats()
-        s["cold_pages"] = len(self.cold) if self.cold is not None else 0
+        s.update(self.backend.stats())
         s["resident_cache_bytes"] = self.cache_bytes()
-        s["prefix_hit_rate"] = hit / prompt if prompt else 0.0
         if self.handoff_store is not None:
             s["handoffs"] = {
                 "remote_admits": self._remote_admits,

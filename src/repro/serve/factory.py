@@ -1,22 +1,22 @@
 """Engine selection: one ``EngineMode`` enum, one ``make_engine`` factory.
 
-Replaces the boolean sprawl (``ServeConfig.paged``-style flags plus
-engine-class imports at every call site) with a single axis:
+One axis instead of engine-class imports at every call site:
 
     scfg = ServeConfig(engine_mode="cluster", num_replicas=4)
     engine = make_engine(cfg, params, scfg)
 
-Legacy boolean configs (``disaggregate=True``) still resolve — with a
-``DeprecationWarning`` — for one PR.
+Every mode covers every arch in ``configs/``: the paged/disaggregated/
+cluster engines pick their cache discipline per arch through
+``serve.backends.make_backend`` (block-table KV paging for global-attention
+archs, the snapshot pool for recurrent/SWA/enc-dec archs).
 """
 from __future__ import annotations
 
-import warnings
 from typing import Any, Optional, Sequence, Union
 
 from repro.config.model import ModelConfig
 from repro.config.run import EngineMode, ServeConfig
-from repro.models.transformer import ExecPolicy, supports_paging
+from repro.models.transformer import ExecPolicy
 from repro.serve.cluster import ServeCluster, TenantSpec
 from repro.serve.disagg import DisaggregatedEngine
 from repro.serve.engines import (
@@ -24,21 +24,10 @@ from repro.serve.engines import (
 
 
 def resolve_engine_mode(scfg: ServeConfig) -> EngineMode:
-    """The configured engine mode, deriving it from legacy boolean flags
-    (with a ``DeprecationWarning``) when ``engine_mode`` is unset."""
+    """The configured engine mode; ``""`` defaults to continuous batching.
+    Raises ValueError for a mode string outside ``EngineMode``."""
     if scfg.engine_mode:
-        mode = EngineMode(scfg.engine_mode)
-        if scfg.disaggregate and mode not in (
-                EngineMode.DISAGGREGATED, EngineMode.CLUSTER):
-            raise ValueError(
-                f"engine_mode={mode.value!r} conflicts with disaggregate=True")
-        return mode
-    if scfg.disaggregate:
-        warnings.warn(
-            "ServeConfig(disaggregate=True) is deprecated; use "
-            "ServeConfig(engine_mode='disaggregated')",
-            DeprecationWarning, stacklevel=3)
-        return EngineMode.DISAGGREGATED
+        return EngineMode(scfg.engine_mode)
     return EngineMode.CONTINUOUS
 
 
@@ -54,11 +43,6 @@ def make_engine(cfg: ModelConfig, params, scfg: ServeConfig,
     ``tenants`` and ``profile`` only apply to the modes that use them
     (cluster QoS; disaggregated/cluster routing cost model)."""
     mode = resolve_engine_mode(scfg)
-    if mode in (EngineMode.PAGED, EngineMode.CLUSTER) \
-            and not supports_paging(cfg):
-        raise ValueError(
-            f"{cfg.arch_id}: engine_mode={mode.value!r} needs an "
-            "all-global-attention decoder-only arch")
     if mode == EngineMode.FIXED:
         return FixedBatchEngine(cfg, params, scfg, policy)
     if mode == EngineMode.CONTINUOUS:

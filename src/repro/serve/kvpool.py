@@ -302,16 +302,22 @@ class KVHandoff:
         return -(-self.prompt_len // page_size)
 
 
-def pack_handoff(h: KVHandoff) -> bytes:
+def pack_handoff(h: Any) -> bytes:
     """Serialize a handoff for transport through a ``ShardedStore`` over
-    ``PeerEndpoint`` blobs.  The link between the prefill and decode
-    endpoints is an internal, trusted one (same pod / same process here), so
-    plain pickling is the honest minimal wire format.  The dataclass is
-    pickled directly — ``dataclasses.asdict`` would deep-copy every KV page
-    blob (the dominant payload) just to throw the copy away."""
+    ``PeerEndpoint`` blobs.  Accepts any handoff dataclass (``KVHandoff``
+    or ``serve.backends.SnapshotHandoff``) — the link between the prefill
+    and decode endpoints is an internal, trusted one (same pod / same
+    process here), so plain pickling is the honest minimal wire format.
+    The dataclass is pickled directly — ``dataclasses.asdict`` would
+    deep-copy every state blob (the dominant payload) just to throw the
+    copy away."""
     return pickle.dumps(h, protocol=pickle.HIGHEST_PROTOCOL)
 
 
-def unpack_handoff(data: bytes) -> KVHandoff:
+def unpack_handoff(data: bytes) -> Any:
+    """Deserialize a transported handoff blob.  Returns whatever handoff
+    object was packed (``KVHandoff``, ``SnapshotHandoff``); a legacy plain
+    dict is coerced to ``KVHandoff``.  Type validation against the target
+    backend happens in ``CacheBackend.import_handoff``."""
     obj = pickle.loads(data)
-    return obj if isinstance(obj, KVHandoff) else KVHandoff(**obj)
+    return KVHandoff(**obj) if isinstance(obj, dict) else obj

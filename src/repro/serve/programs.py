@@ -1,8 +1,10 @@
 """Fused device programs for the serve fast path.
 
-Exactly four fixed-shape jitted program families (the G2 device half):
-bucket admit + batched decode, each in a dense and a paged (block-table)
-variant.  The builders close over nothing but frozen configs, so the jitted
+Fixed-shape jitted program families (the G2 device half): bucket admit +
+batched decode, each in a dense and a paged (block-table) variant, plus the
+snapshot-pool programs (resume-admit from a donor snapshot, slot
+read/insert) that back ``serve.backends.SnapshotBackend`` for recurrent/SWA
+archs.  The builders close over nothing but frozen configs, so the jitted
 callables are cached process-wide (``functools.lru_cache``): N replica
 engines of a ``ServeCluster`` — or the pair of endpoints of a
 ``DisaggregatedEngine`` — share one compiled program per (config, policy,
@@ -17,12 +19,12 @@ import jax
 
 from repro.config.model import ModelConfig
 from repro.models.transformer import (
-    ExecPolicy, init_decode_state, insert_decode_slot, read_page,
-    scatter_solo_pages, write_page)
+    ExecPolicy, init_decode_state, insert_decode_slot, read_decode_slot,
+    read_page, scatter_solo_pages, write_page)
 from repro.serve.sampler import sample_slots
 from repro.train.steps import (
     make_bucket_prefill_step, make_decode_step, make_paged_decode_step,
-    make_paged_prefill_step)
+    make_paged_prefill_step, make_resume_prefill_step)
 
 
 def _make_admit_program(cfg: ModelConfig, policy: ExecPolicy, capacity: int):
@@ -94,6 +96,32 @@ def _make_paged_admit_program(cfg: ModelConfig, policy: ExecPolicy,
     return admit
 
 
+def _make_resume_admit_program(cfg: ModelConfig, policy: ExecPolicy):
+    """Snapshot-pool admission (warm path), one fused dispatch: prefill only
+    the suffix bucket on top of a restored donor snapshot, sample the first
+    token, splice the result into the running batch at ``slot``, update the
+    slot mirrors.  Also returns the post-prefill solo state so the backend
+    can register it as a fresh full-prompt snapshot without a second
+    dispatch.  The donor is *not* donated — it stays resident in the pool
+    (snapshots are shared read-only, the recurrent analogue of CoW pages)."""
+    prefill = make_resume_prefill_step(cfg, policy)
+
+    def admit(params, states, donor, batch, slot, key, mirrors):
+        solo, last_logits = prefill(params, donor, batch)
+        tok, key = sample_slots(last_logits, key, batch["temp"][None],
+                                batch["top_k"][None], batch["top_p"][None])
+        states = insert_decode_slot(states, solo, slot)
+        mirrors = {
+            "tok": mirrors["tok"].at[slot].set(tok[0]),
+            "pos": mirrors["pos"].at[slot].set(batch["length"]),
+            "temp": mirrors["temp"].at[slot].set(batch["temp"]),
+            "top_k": mirrors["top_k"].at[slot].set(batch["top_k"]),
+            "top_p": mirrors["top_p"].at[slot].set(batch["top_p"]),
+        }
+        return states, solo, tok, key, mirrors
+    return admit
+
+
 def _make_paged_decode_program(cfg: ModelConfig, policy: ExecPolicy):
     """Batched decode through the block table: K/V reads and the new token's
     write are routed to physical pool pages.  The table rides host->device
@@ -140,8 +168,30 @@ def paged_decode_program(cfg: ModelConfig, policy: ExecPolicy):
 
 
 @functools.lru_cache(maxsize=None)
+def resume_admit_program(cfg: ModelConfig, policy: ExecPolicy):
+    return jax.jit(_make_resume_admit_program(cfg, policy),
+                   donate_argnums=(1, 6))
+
+
+@functools.lru_cache(maxsize=None)
 def read_page_program():
     return jax.jit(read_page)
+
+
+@functools.lru_cache(maxsize=None)
+def read_slot_program():
+    """Snapshot capture: slice one slot's state out of the running batch
+    (fresh small buffers, safe to keep while the batch keeps being
+    donated through decode steps)."""
+    return jax.jit(read_decode_slot)
+
+
+@functools.lru_cache(maxsize=None)
+def insert_slot_program():
+    """Handoff import: splice a batch-1 state blob into the running batch.
+    The batched state is donated; the solo blob is not (it may be a pool
+    snapshot)."""
+    return jax.jit(insert_decode_slot, donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)

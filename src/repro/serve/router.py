@@ -2,13 +2,16 @@
 
 The serve-plane half of cluster routing.  ``core.costmodel.decide_replica``
 owns the *scoring* (suffix prefill after affinity hits, queue wait, slot and
-page pressure); this module owns the *signal collection* — turning N live
+cache pressure); this module owns the *signal collection* — turning N live
 ``PagedEngine`` replicas into ``ReplicaSignals`` snapshots, including the
-prefix-affinity probe: the request's prompt is chain-hashed
-(``kvpool.chain_keys``) and each replica reports how many leading pages it
-already holds (hot index or cold tier), without perturbing LRU state.
-Shared-prefix traffic therefore lands where its KV pages already live, the
-page-locality placement arXiv:2507.04001 argues for.
+prefix-affinity probe.  The probe is backend-generic: the request's prompt
+is turned into a probe handle once (``CacheBackend.prepare_probe`` — chain
+keys for the paged backend, the raw prompt for the snapshot backend) and
+each replica reports ``(hit_units, hit_tokens)`` it already holds (hot tier
+or cold tier), without perturbing LRU state.  Shared-prefix traffic
+therefore lands where its decode state already lives — the page-locality
+placement arXiv:2507.04001 argues for, now covering recurrent/SWA archs
+through snapshot affinity too.
 """
 from __future__ import annotations
 
@@ -20,7 +23,6 @@ from repro.core.characterize import SidecarProfile
 from repro.core.costmodel import Decision, ReplicaSignals
 from repro.core.planner import ReplicaRoutePlanner
 from repro.serve.engines import PagedEngine
-from repro.serve.kvpool import chain_keys
 
 
 class ClusterRouter:
@@ -28,7 +30,10 @@ class ClusterRouter:
 
     Thin stateful wrapper over ``ReplicaRoutePlanner``: collects each
     replica's snapshot, runs the cost model, and keeps the per-request
-    decision log (``plan().to_table()``) for explainability."""
+    decision log (``plan().to_table()``) for explainability.  All replicas
+    routed through one ``pick`` call serve the same model, hence share one
+    backend kind — the probe handle a replica's backend prepares is valid
+    on every other replica in the group."""
 
     def __init__(self, flops_per_token: float, page_size: int,
                  profile: Optional[SidecarProfile] = None):
@@ -37,19 +42,22 @@ class ClusterRouter:
                                            profile=profile)
 
     def signals(self, replicas: Sequence[PagedEngine], alive: Sequence[bool],
-                chains: List[bytes]) -> List[ReplicaSignals]:
+                handle) -> List[ReplicaSignals]:
         out = []
         for i, rep in enumerate(replicas):
             if not alive[i]:
                 out.append(ReplicaSignals(f"r{i}", 0, 0, 0, 0, alive=False))
                 continue
+            hit_units, hit_tokens = (rep.backend.probe(handle)
+                                     if handle is not None else (0, 0))
             out.append(ReplicaSignals(
                 name=f"r{i}",
                 free_slots=rep.slots.free_count(),
                 queue_depth=rep.scheduler.depth(),
                 max_slots=rep.scfg.max_batch,
-                free_pages=rep.pool.available(),
-                hit_pages=rep.prefix_hits(chains) if chains else 0))
+                free_pages=rep.backend.available_units(),
+                hit_pages=hit_units,
+                hit_tokens=hit_tokens))
         return out
 
     def pick(self, crid: int, prompt: np.ndarray, max_new_tokens: int,
@@ -57,10 +65,16 @@ class ClusterRouter:
              ) -> Tuple[int, Decision, List[ReplicaSignals]]:
         """Route one request.  Returns ``(replica_index, decision,
         signals)``; index is -1 when no replica is alive."""
-        chains = (chain_keys(np.asarray(prompt, np.int32), self.page_size)
-                  if any(alive) else [])
-        sig = self.signals(replicas, alive, chains)
-        pages_needed = -(-(len(prompt) + max_new_tokens) // self.page_size)
+        handle = None
+        pages_needed = 0
+        for i, rep in enumerate(replicas):
+            if alive[i]:
+                handle = rep.backend.prepare_probe(
+                    np.asarray(prompt, np.int32))
+                pages_needed = rep.backend.units_needed(len(prompt),
+                                                        max_new_tokens)
+                break
+        sig = self.signals(replicas, alive, handle)
         idx, d = self.planner.route(crid, len(prompt), pages_needed, sig)
         return idx, d, sig
 

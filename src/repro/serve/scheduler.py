@@ -10,7 +10,7 @@ import dataclasses
 import heapq
 import time
 from collections import deque
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -22,6 +22,41 @@ from repro.serve.sampler import SamplingParams
 
 class QueueFull(RuntimeError):
     """Raised on submit when the bounded admission queue is at capacity."""
+
+
+StopSpec = Union[None, int, Sequence[int], Sequence[Sequence[int]]]
+
+
+def normalize_stop(stop: StopSpec) -> Tuple[Tuple[int, ...], ...]:
+    """Canonicalize a user-facing stop spec into a tuple of token-id
+    sequences.  Accepts None, a single token id, one sequence of ids, or a
+    list of sequences; every sequence must be non-empty (an empty stop
+    sequence would finish every request at its first token)."""
+    if stop is None:
+        return ()
+    if isinstance(stop, (int, np.integer)):
+        return ((int(stop),),)
+    seqs = []
+    for item in stop:
+        if isinstance(item, (int, np.integer)):
+            # flat sequence of ids: the whole spec is ONE stop sequence
+            return (tuple(int(t) for t in stop),)
+        if len(item) == 0:
+            raise ValueError("stop sequences must be non-empty")
+        seqs.append(tuple(int(t) for t in item))
+    return tuple(seqs)
+
+
+def hit_stop(output: Sequence[int],
+             stop: Tuple[Tuple[int, ...], ...]) -> bool:
+    """Whether the generated output ends with any stop sequence.  Host-side
+    suffix check after each decode step — token-id sequences only (string
+    matching would need the tokenizer on the serve plane)."""
+    for seq in stop:
+        n = len(seq)
+        if n and len(output) >= n and tuple(output[-n:]) == seq:
+            return True
+    return False
 
 
 @dataclasses.dataclass
@@ -36,8 +71,9 @@ class Request:
     finished_at: float = 0.0
     slot: int = -1
     output: List[int] = dataclasses.field(default_factory=list)
-    pages: List[int] = dataclasses.field(default_factory=list)  # paged engine
+    pages: List[int] = dataclasses.field(default_factory=list)  # paged backend
     prefix_hit_tokens: int = 0
+    stop: Tuple[Tuple[int, ...], ...] = ()   # normalized stop sequences
 
     @property
     def done(self) -> bool:

@@ -207,6 +207,34 @@ def make_paged_prefill_step(cfg: ModelConfig, capacity: int,
     return prefill_step
 
 
+def make_resume_prefill_step(cfg: ModelConfig,
+                             policy: ExecPolicy = ExecPolicy()):
+    """Continuation prefill from a restored decode-state snapshot (the
+    SnapshotBackend admission path — the recurrent analogue of
+    ``make_paged_prefill_step``).
+
+    ``donor`` is a batch-1 solo state captured at position ``hit_len`` (a
+    snapshot from the pool, or an imported handoff blob); only the suffix is
+    prefilled, at positions offset by ``hit_len``.  Exact-prefill archs admit
+    through exact-length buckets, so the suffix carries no padding, but pad
+    invalidation is kept for the general case.  One trace per suffix bucket
+    length — ``hit_len``/``length`` are traced scalars.
+    """
+    def prefill_step(params, donor, batch):
+        # batch: tokens (1, S) suffix bucket, positions (1, S) =
+        # hit_len + arange(S), length () total true L, hit_len ()
+        logits, new_solo, _ = forward(
+            params, cfg, batch["tokens"], batch["positions"],
+            policy=policy, states=donor)
+        length = batch["length"]
+        new_solo = invalidate_positions_from(new_solo, length)
+        new_solo["pos"] = length.astype(jnp.int32)
+        last = jax.lax.dynamic_slice_in_dim(
+            logits, length - batch["hit_len"] - 1, 1, axis=1)
+        return new_solo, last[:, 0]
+    return prefill_step
+
+
 def make_paged_decode_step(cfg: ModelConfig,
                            policy: ExecPolicy = ExecPolicy()):
     """Batched decode reading/writing K/V through the block table."""

@@ -1,0 +1,314 @@
+"""CacheBackend layer: snapshot-pool units, recurrent archs through the
+paged/cluster engines (bit-identical to the dense baselines), snapshot
+prefix reuse + cold-tier roundtrip, mixed-arch cluster, stop sequences.
+Tier-1."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.config import ServeConfig, TrainConfig, get_config
+from repro.serve import (
+    ContinuousEngine, FixedBatchEngine, PagedEngine, ServeCluster,
+    make_engine)
+from repro.serve.backends import (
+    PagedKVBackend, SnapshotBackend, SnapshotPool, make_backend, snap_key)
+from repro.serve.scheduler import hit_stop, normalize_stop
+from repro.train.steps import init_train_state
+
+
+@pytest.fixture(scope="module")
+def tiny_engine_parts():
+    cfg = get_config("repro-tiny")
+    state = init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
+    return cfg, state["params"]
+
+
+@pytest.fixture(scope="module")
+def rwkv_engine_parts():
+    cfg = get_config("rwkv6-3b").reduced()
+    state = init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
+    return cfg, state["params"]
+
+
+@pytest.fixture(scope="module")
+def rglru_engine_parts():
+    cfg = get_config("recurrentgemma-9b").reduced()
+    state = init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
+    return cfg, state["params"]
+
+
+def _scfg(**kw):
+    defaults = dict(max_batch=2, max_seq_len=96, prefill_buckets=(8, 16),
+                    page_size=8)
+    defaults.update(kw)
+    return ServeConfig(**defaults)
+
+
+def _prompt(rng, cfg, n):
+    return rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+
+
+# ----------------------------------------------------------------------------
+# backend selection
+# ----------------------------------------------------------------------------
+
+def test_make_backend_picks_discipline_per_arch(tiny_engine_parts,
+                                                rwkv_engine_parts):
+    tcfg, _ = tiny_engine_parts
+    rcfg, _ = rwkv_engine_parts
+    assert isinstance(make_backend(tcfg, _scfg()), PagedKVBackend)
+    assert isinstance(make_backend(rcfg, _scfg()), SnapshotBackend)
+
+
+# ----------------------------------------------------------------------------
+# snapshot pool units (host side, no engine)
+# ----------------------------------------------------------------------------
+
+def test_snapshot_pool_lru_evict_and_roundtrip():
+    pool = SnapshotPool(2)
+    evicted = []
+    cb = lambda k, ln, st: evicted.append((k, ln, st))   # noqa: E731
+    pool.put(b"a", 8, "state-a", evict_cb=cb)
+    pool.put(b"b", 16, "state-b", evict_cb=cb)
+    assert pool.get(b"a") == "state-a"          # touch: a is now MRU
+    pool.put(b"c", 24, "state-c", evict_cb=cb)  # capacity 2 -> b evicted
+    assert evicted == [(b"b", 16, "state-b")]
+    assert pool.get(b"b") is None and pool.get(b"c") == "state-c"
+    assert pool.lengths() == [24, 8]
+    # contains() is a read-only probe: no counters, no LRU touch
+    lookups = pool.lookups
+    assert pool.contains(b"a") and not pool.contains(b"b")
+    assert pool.lookups == lookups
+    # newest wins on duplicate keys
+    pool.put(b"a", 8, "state-a2", evict_cb=cb)
+    assert pool.get(b"a") == "state-a2"
+    st = pool.stats()
+    assert st["resident"] == 2 and st["evictions"] == 1
+    with pytest.raises(ValueError, match="capacity >= 1"):
+        SnapshotPool(0)
+
+
+def test_snap_key_commits_to_whole_prefix():
+    t = np.arange(16, dtype=np.int32)
+    assert snap_key(t) == snap_key(t.copy())
+    assert snap_key(t) != snap_key(t[:15])
+    u = t.copy()
+    u[0] += 1
+    assert snap_key(t) != snap_key(u)
+
+
+# ----------------------------------------------------------------------------
+# recurrent archs through PagedEngine: bit-identical to the dense baselines
+# ----------------------------------------------------------------------------
+
+def test_rwkv6_snapshot_engine_matches_fixed_batch(rwkv_engine_parts):
+    """Continuous/snapshot serving of an rwkv6 arch must reproduce the
+    fixed-batch dense engine's greedy tokens exactly."""
+    cfg, params = rwkv_engine_parts
+    rng = np.random.default_rng(0)
+    prompts = [_prompt(rng, cfg, 11) for _ in range(3)]  # equal-length batch
+    fixed = FixedBatchEngine(cfg, params, _scfg())
+    snap = PagedEngine(cfg, params, _scfg())
+    assert isinstance(snap.backend, SnapshotBackend)
+    f = fixed.generate(prompts, 8)
+    s = snap.generate(prompts, 8)
+    for i in range(len(prompts)):
+        assert s[i].output == f[i].output
+    snap.close()
+
+
+def test_rglru_snapshot_engine_matches_dense(rglru_engine_parts):
+    """recurrentgemma (rglru + local attention) through the snapshot
+    backend, mixed prompt lengths, vs ContinuousEngine."""
+    cfg, params = rglru_engine_parts
+    rng = np.random.default_rng(1)
+    prompts = [_prompt(rng, cfg, n) for n in (5, 9, 14)]
+    dense = ContinuousEngine(cfg, params, _scfg())
+    snap = make_engine(cfg, params, _scfg(engine_mode="paged"))
+    assert isinstance(snap, PagedEngine)
+    assert isinstance(snap.backend, SnapshotBackend)
+    d = dense.generate(prompts, 6)
+    s = snap.generate(prompts, 6)
+    for i in range(len(prompts)):
+        assert s[i].output == d[i].output
+    dense.close()
+    snap.close()
+
+
+def test_snapshot_prefix_reuse_is_exact(rwkv_engine_parts):
+    """Session-continuation prompts (each turn extends the last served
+    prompt) restore the registered snapshot and prefill only the suffix;
+    outputs must match a reuse-off engine exactly and the hit rate must
+    show the reuse happened.  Snapshots register at full-prompt boundaries,
+    so reuse is the multi-turn pattern — not arbitrary shared prefixes."""
+    cfg, params = rwkv_engine_parts
+    rng = np.random.default_rng(2)
+    turns = [_prompt(rng, cfg, 12)]
+    for k in (4, 7):            # each turn extends the previous prompt
+        turns.append(np.concatenate([turns[-1], _prompt(rng, cfg, k)]))
+    on = PagedEngine(cfg, params, _scfg(prefix_cache=True))
+    off = PagedEngine(cfg, params, _scfg(prefix_cache=False))
+    for i, p in enumerate(turns):       # serve turn-by-turn, like a session
+        ra = on.submit(p, 6)
+        rb = off.submit(p, 6)
+        on.run()
+        off.run()
+        assert on.request(ra).output == off.request(rb).output, i
+    st = on.stats()
+    assert st["prefix_hit_rate"] > 0.0
+    assert st["snapshot_pool"]["hits"] > 0
+    assert off.stats()["prefix_hit_rate"] == 0.0
+    on.close()
+    off.close()
+
+
+def test_snapshot_cold_tier_spill_and_fault_roundtrip(rwkv_engine_parts):
+    """Snapshots evicted from the hot pool spill to the cold tier and fault
+    back on the next prefix hit with exact outputs."""
+    cfg, params = rwkv_engine_parts
+    rng = np.random.default_rng(3)
+    p1 = _prompt(rng, cfg, 12)
+    p2 = np.concatenate([p1, _prompt(rng, cfg, 6)])     # next session turn
+    eng = PagedEngine(cfg, params,
+                      _scfg(snapshot_slots=2, cold_pages=64))
+    r1 = eng.submit(p1, 5)
+    eng.run()
+    for _ in range(4):          # unrelated prompts push p1's snapshots out
+        eng.submit(_prompt(rng, cfg, 10), 4)
+        eng.run()
+    eng.executor.drain()        # let the sidecar finish host staging
+    be = eng.backend
+    assert be.spills > 0 and len(be.cold) > 0
+    r2 = eng.submit(p2, 5)      # prefix faults back in from the cold tier
+    eng.run()
+    assert be.faults > 0
+
+    ref = PagedEngine(cfg, params, _scfg(prefix_cache=False))
+    s1 = ref.submit(p1, 5)
+    s2 = ref.submit(p2, 5)
+    ref.run()
+    assert eng.request(r1).output == ref.request(s1).output
+    assert eng.request(r2).output == ref.request(s2).output
+    eng.close()
+    ref.close()
+
+
+# ----------------------------------------------------------------------------
+# clustering: recurrent archs and mixed-arch traffic
+# ----------------------------------------------------------------------------
+
+def test_rglru_cluster_matches_dense(rglru_engine_parts):
+    cfg, params = rglru_engine_parts
+    rng = np.random.default_rng(4)
+    prompts = [_prompt(rng, cfg, n) for n in (6, 10, 8)]
+    dense = ContinuousEngine(cfg, params, _scfg())
+    clu = make_engine(cfg, params,
+                      _scfg(engine_mode="cluster", num_replicas=2,
+                            cluster_prefill=True))
+    assert isinstance(clu, ServeCluster)
+    d = dense.generate(prompts, 6)
+    c = clu.generate(prompts, 6)
+    for i in range(len(prompts)):
+        assert c[i] == d[i].output
+    st = clu.stats()
+    assert st["completed"] == len(prompts)
+    assert all(r["snapshot_pool"] is not None for r in st["replicas"])
+    dense.close()
+    clu.close()
+
+
+def test_mixed_arch_cluster_exactness(tiny_engine_parts, rwkv_engine_parts):
+    """One cluster serving transformer + rwkv6 traffic concurrently:
+    requests route only within their model group and every output matches
+    the per-arch dense baseline bit-for-bit."""
+    tcfg, tparams = tiny_engine_parts
+    rcfg, rparams = rwkv_engine_parts
+    rng = np.random.default_rng(5)
+    t_prompts = [_prompt(rng, tcfg, n) for n in (7, 12, 9)]
+    r_prompts = [_prompt(rng, rcfg, n) for n in (6, 11, 8)]
+
+    clu = ServeCluster(tcfg, tparams, _scfg(engine_mode="cluster",
+                                            num_replicas=1,
+                                            cluster_prefill=False),
+                       extra_models={"rwkv": (rcfg, rparams)})
+    assert clu._model_of == ["default", "rwkv"]
+    t_crids = [clu.submit(p, 6) for p in t_prompts]
+    r_crids = [clu.submit(p, 6, model="rwkv") for p in r_prompts]
+    clu.run()
+
+    t_ref = ContinuousEngine(tcfg, tparams, _scfg())
+    r_ref = ContinuousEngine(rcfg, rparams, _scfg())
+    td = t_ref.generate(t_prompts, 6)
+    rd = r_ref.generate(r_prompts, 6)
+    for i, crid in enumerate(t_crids):
+        rec = clu.result(crid)
+        assert rec["tokens"] == td[i].output
+        assert clu._model_of[rec["replica"]] == "default"
+    for i, crid in enumerate(r_crids):
+        rec = clu.result(crid)
+        assert rec["tokens"] == rd[i].output
+        assert clu._model_of[rec["replica"]] == "rwkv"
+    st = clu.stats()
+    assert [r["model"] for r in st["replicas"]] == ["default", "rwkv"]
+    with pytest.raises(ValueError, match="unknown model group"):
+        clu.submit(t_prompts[0], 2, model="nope")
+    t_ref.close()
+    r_ref.close()
+    clu.close()
+
+
+# ----------------------------------------------------------------------------
+# stop sequences
+# ----------------------------------------------------------------------------
+
+def test_normalize_stop_and_hit_stop_units():
+    assert normalize_stop(None) == ()
+    assert normalize_stop(7) == ((7,),)
+    assert normalize_stop([1, 2]) == ((1, 2),)
+    assert normalize_stop([[1, 2], [3]]) == ((1, 2), (3,))
+    with pytest.raises(ValueError, match="non-empty"):
+        normalize_stop([[]])
+    stop = normalize_stop([[2, 3], [9]])
+    assert hit_stop([1, 2, 3], stop)
+    assert not hit_stop([2, 3, 4], stop)        # suffix only
+    assert hit_stop([9], stop)
+    assert not hit_stop([], stop)
+
+
+def test_stop_sequence_truncates_engine_output(tiny_engine_parts):
+    """A stop sequence ends the request at the step it completes (tokens
+    kept inclusively), matching the unstopped trace up to that point."""
+    cfg, params = tiny_engine_parts
+    rng = np.random.default_rng(6)
+    prompt = _prompt(rng, cfg, 9)
+    eng = ContinuousEngine(cfg, params, _scfg())
+    free = eng.generate([prompt], 12)[0].output
+    assert len(free) == 12
+    cut = 5
+    stop = free[cut - 1:cut + 1]                # 2-gram ending at index cut
+    rid = eng.submit(prompt, 12, stop=[stop])
+    eng.run()
+    got = eng.request(rid).output
+    assert got == free[:cut + 1]                # inclusive of the stop seq
+    # single-token stop on the first generated token
+    rid2 = eng.submit(prompt, 12, stop=free[0])
+    eng.run()
+    assert eng.request(rid2).output == free[:1]
+    eng.close()
+
+
+def test_stop_sequence_through_cluster(tiny_engine_parts):
+    cfg, params = tiny_engine_parts
+    rng = np.random.default_rng(7)
+    prompt = _prompt(rng, cfg, 8)
+    ref = ContinuousEngine(cfg, params, _scfg())
+    free = ref.generate([prompt], 10)[0].output
+    ref.close()
+    clu = ServeCluster(cfg, params, _scfg(engine_mode="cluster",
+                                          num_replicas=1,
+                                          cluster_prefill=False))
+    crid = clu.submit(prompt, 10, stop=[free[3:5]])
+    clu.run()
+    assert clu.result(crid)["tokens"] == free[:5]
+    clu.close()

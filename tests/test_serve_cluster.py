@@ -262,16 +262,16 @@ def test_replica_route_planner_log_is_bounded():
 # factory / engine-mode resolution / compat shim
 # ----------------------------------------------------------------------------
 
-def test_resolve_engine_mode_default_and_legacy():
+def test_resolve_engine_mode_default_and_invalid():
     assert resolve_engine_mode(ServeConfig()) == EngineMode.CONTINUOUS
-    with pytest.warns(DeprecationWarning, match="disaggregate=True"):
-        assert resolve_engine_mode(ServeConfig(disaggregate=True)) \
-            == EngineMode.DISAGGREGATED
-    with pytest.raises(ValueError, match="conflicts"):
-        resolve_engine_mode(ServeConfig(engine_mode="paged",
-                                        disaggregate=True))
+    for mode in EngineMode:
+        assert resolve_engine_mode(
+            ServeConfig(engine_mode=mode.value)) == mode
     with pytest.raises(ValueError):
         resolve_engine_mode(ServeConfig(engine_mode="warp-drive"))
+    # The PR-6-deprecated boolean selector is gone, not just ignored.
+    with pytest.raises(TypeError):
+        ServeConfig(disaggregate=True)
 
 
 def test_make_engine_dispatch(tiny_engine_parts):

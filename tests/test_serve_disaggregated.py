@@ -77,13 +77,12 @@ def test_handoff_roundtrip_page_equivalence(tiny_engine_parts, tmp_path):
         _leaves_equal(b1, b2)
 
     dec = DisaggregatedEngine(
-        cfg, params, _scfg(disaggregate=True, disagg_route="remote",
-                           prefix_cache=False))
+        cfg, params, _scfg(disagg_route="remote", prefix_cache=False))
     req = Request(7, prompt, 8)
-    tok0 = dec._import_handoff(req, h2)
+    tok0 = dec.backend.import_handoff(req, h2)
     assert tok0 == h.first_token
     for i, blob in enumerate(h.page_blobs):     # pool pages == shipped pages
-        got = jax.device_get(dec._read_page_prog(
+        got = jax.device_get(dec.backend._read_page_prog(
             dec.states, jnp.asarray(req.pages[i], jnp.int32)))
         _leaves_equal(got, blob)
     worker.close()
@@ -99,8 +98,7 @@ def test_disaggregated_matches_single_engine(tiny_engine_parts):
     prompts = [np.concatenate([prefix, _prompt(rng, cfg, k)])
                for k in (5, 9, 3)] + [_prompt(rng, cfg, 11)]
     single = PagedEngine(cfg, params, _scfg())
-    dis = DisaggregatedEngine(
-        cfg, params, _scfg(disaggregate=True, disagg_route="remote"))
+    dis = DisaggregatedEngine(cfg, params, _scfg(disagg_route="remote"))
     a = single.generate(prompts, 6)
     b = dis.generate(prompts, 6)
     for i in range(len(prompts)):
@@ -124,8 +122,7 @@ def test_disaggregated_auto_routing_end_to_end(tiny_engine_parts):
                              link_lat=20e-6, link_bw=16e9,
                              accel_flops=1e9, accel_mem_bw=1e9)
     dis = DisaggregatedEngine(
-        cfg, params, _scfg(disaggregate=True, disagg_route="auto"),
-        profile=profile)
+        cfg, params, _scfg(disagg_route="auto"), profile=profile)
     prompts = [_prompt(rng, cfg, n) for n in (40, 48)]
     out = dis.generate(prompts, 5)
     assert dis.stats()["handoffs"]["remote_admits"] > 0

@@ -142,11 +142,25 @@ def test_paged_matches_dense_outputs(tiny_engine_parts):
     paged.close()
 
 
-def test_paged_rejects_non_global_attention_archs():
+def test_recurrent_arch_serves_through_snapshot_backend():
+    """Non-global-attention archs are no longer rejected: PagedEngine picks
+    the snapshot backend per arch and serves them with dense-exact
+    outputs."""
+    from repro.serve.backends import SnapshotBackend
     cfg = get_config("recurrentgemma-9b").reduced()
     state = init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
-    with pytest.raises(ValueError, match="global-attention"):
-        PagedEngine(cfg, state["params"], _scfg())
+    eng = PagedEngine(cfg, state["params"], _scfg())
+    assert isinstance(eng.backend, SnapshotBackend)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 12)]
+    dense = ContinuousEngine(cfg, state["params"], _scfg())
+    p = eng.generate(prompts, 6)
+    d = dense.generate(prompts, 6)
+    for i in range(len(prompts)):
+        assert p[i].output == d[i].output
+    eng.close()
+    dense.close()
 
 
 def test_page_size_must_divide_capacity(tiny_engine_parts):
