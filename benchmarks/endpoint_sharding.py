@@ -60,7 +60,7 @@ def _drive(store: ShardedStore, read_frac: float, n_ops: int,
 
     def worker(tid):
         r = np.random.default_rng(tid)
-        for i in range(ops_per_thread):
+        for _ in range(ops_per_thread):
             k = keys[int(r.integers(0, len(keys)))]
             ep = store.endpoints[store.owner(k)]
             if r.random() < read_frac:

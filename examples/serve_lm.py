@@ -40,7 +40,7 @@ def main():
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = []
-    for i in range(args.requests):
+    for _ in range(args.requests):
         prompt_len = int(rng.integers(8, 65))
         new = int(rng.integers(4, args.new_tokens + 1))
         prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)

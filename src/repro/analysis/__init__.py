@@ -1,0 +1,48 @@
+"""Static analysis & sanitizers for the serve plane.
+
+Three passes (see the sibling modules for the full conventions):
+
+* ``lockdiscipline`` — ``# guarded-by:`` field annotations checked
+  lexically against ``with <lock>:`` blocks.
+* ``lockorder``     — nested-``with`` acquisition edges cross-checked
+  against the same ``LockOrderGraph`` the runtime ``OrderedLock``
+  sanitizer (``REPRO_LOCK_SANITIZER=1``) populates.
+* ``purity``        — host syncs on decode/prefill hot paths, impure
+  jitted program builders, missing Pallas ``supported()`` gates.
+
+CLI: ``python -m repro.analysis --check src`` (the CI gate).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.analysis import lockdiscipline, lockorder, purity
+from repro.analysis.common import Allowlist, Finding, iter_sources
+from repro.runtime.locks import LockOrderGraph
+
+PASSES = ("locks", "order", "purity")
+
+
+def run_passes(root: str, passes: Sequence[str] = PASSES,
+               graph: Optional[LockOrderGraph] = None) -> List[Finding]:
+    """Run the selected passes over every ``.py`` under ``root`` and return
+    raw findings (allowlist not applied)."""
+    sources = list(iter_sources(root))
+    findings: List[Finding] = []
+    if "locks" in passes:
+        findings.extend(lockdiscipline.run(sources))
+    if "order" in passes:
+        findings.extend(lockorder.run(sources, graph=graph))
+    if "purity" in passes:
+        findings.extend(purity.run(sources))
+    return findings
+
+
+def filter_allowed(findings: Sequence[Finding], allowlist: Allowlist
+                   ) -> List[Finding]:
+    return [f for f in findings if not allowlist.covers(f)]
+
+
+__all__ = [
+    "Allowlist", "Finding", "PASSES", "filter_allowed", "run_passes",
+]

@@ -1,0 +1,80 @@
+"""CLI for the serve-plane analyzers: ``python -m repro.analysis --check src``.
+
+Exit status is the contract: 0 means every finding is either fixed or
+allowlisted-with-justification; non-zero means a new hazard landed.  CI
+runs this next to ruff.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from repro.analysis import PASSES, filter_allowed, run_passes
+from repro.analysis.common import Allowlist, AllowlistError, Finding
+
+
+def _default_allowlist() -> str:
+    return os.path.join(os.path.dirname(__file__), "allowlist.txt")
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Serve-plane concurrency & JAX-hazard analyzer "
+                    "(lock discipline, lock order, hot-path purity).")
+    ap.add_argument("--check", metavar="PATH", default="src",
+                    help="directory (or file) to analyze [default: src]")
+    ap.add_argument("--passes", default=",".join(PASSES),
+                    help=f"comma-separated subset of {','.join(PASSES)}")
+    ap.add_argument("--allowlist", default=None,
+                    help="allowlist file [default: the package's "
+                         "allowlist.txt; 'none' disables]")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print allowlisted findings and stale entries")
+    args = ap.parse_args(argv)
+
+    passes = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = [p for p in passes if p not in PASSES]
+    if unknown:
+        ap.error(f"unknown pass(es): {', '.join(unknown)}")
+
+    if args.allowlist == "none":
+        allowlist = Allowlist.empty()
+    else:
+        path = args.allowlist or _default_allowlist()
+        if os.path.exists(path):
+            try:
+                allowlist = Allowlist.load(path)
+            except AllowlistError as e:
+                print(f"error: {e}", file=sys.stderr)
+                return 2
+        else:
+            allowlist = Allowlist.empty()
+
+    if not os.path.exists(args.check):
+        print(f"error: no such path: {args.check}", file=sys.stderr)
+        return 2
+
+    findings = run_passes(args.check, passes)
+    live = filter_allowed(findings, allowlist)
+    allowed = [f for f in findings if allowlist.covers(f)]
+
+    for f in sorted(live, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.format())
+    if args.verbose:
+        for f in sorted(allowed, key=lambda f: (f.path, f.line)):
+            print(f"allowed: {f.format()}")
+        for entry in allowlist.unused(findings):
+            print(f"stale allowlist entry (no matching finding): {entry}")
+
+    n_files = len({f.path for f in findings}) if findings else 0
+    print(f"repro.analysis: {len(live)} finding(s) "
+          f"({len(allowed)} allowlisted) across "
+          f"{n_files} file(s); passes: {','.join(passes)}")
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,181 @@
+"""Shared plumbing for the static-analysis passes.
+
+Findings, source loading (AST + the comment side-channel the ``guarded-by``
+convention lives in), and the allowlist that makes the purity gate
+incremental: every audited-but-unfixable callsite is listed with a
+justification, new findings fail the build.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import tokenize
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer hit.  ``key()`` is the allowlist granularity: a rule in
+    a function — line numbers drift too fast to pin suppressions to."""
+    rule: str                 # LOCK_GUARD | LOCK_ORDER | HOST_SYNC | ...
+    path: str                 # repo-relative posix path
+    line: int
+    qualname: str             # Class.method / function / <module>
+    message: str
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.qualname)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] " \
+               f"{self.qualname}: {self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """A parsed module plus its comment map (AST drops comments, the
+    annotation convention needs them)."""
+    path: str                     # repo-relative posix path
+    tree: ast.Module
+    comments: Dict[int, str]      # line -> comment text (sans leading '#')
+    lines: List[str]
+
+    def comment_at(self, line: int) -> str:
+        return self.comments.get(line, "")
+
+    def annotation(self, line: int, tag: str) -> Optional[str]:
+        """Value of ``# <tag>: <value>`` on ``line`` or the standalone
+        comment line directly above it (long statements push trailing
+        comments over the line-length limit)."""
+        for ln in (line, line - 1):
+            c = self.comments.get(ln, "")
+            if ln != line and self.lines[ln - 1].split("#")[0].strip():
+                continue        # line above holds code: not a standalone note
+            marker = tag + ":"
+            if marker in c:
+                return c.split(marker, 1)[1].strip().split("#")[0].strip()
+        return None
+
+
+def load_source(path: str, rel: str) -> SourceFile:
+    with open(path, "rb") as f:
+        raw = f.read()
+    text = raw.decode("utf-8")
+    tree = ast.parse(text, filename=rel)
+    comments: Dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                comments[tok.start[0]] = tok.string.lstrip("#").strip()
+    except tokenize.TokenError:     # pragma: no cover - parse already passed
+        pass
+    return SourceFile(rel, tree, comments, text.splitlines())
+
+
+def iter_sources(root: str) -> Iterator[SourceFile]:
+    """Every ``.py`` file under ``root``, parsed, in deterministic order.
+    ``root`` may also be a single file."""
+    root = os.path.normpath(root)
+    if os.path.isfile(root):
+        yield load_source(root, root.replace(os.sep, "/"))
+        return
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__", ".git"))
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                full = os.path.join(dirpath, name)
+                yield load_source(full, full.replace(os.sep, "/"))
+
+
+# ----------------------------------------------------------------------------
+# Allowlist
+# ----------------------------------------------------------------------------
+
+class AllowlistError(ValueError):
+    """Malformed allowlist line (missing justification, bad shape)."""
+
+
+@dataclasses.dataclass
+class Allowlist:
+    """Audited-callsite suppressions: ``RULE path::qualname  # why``.
+
+    Every entry must carry a justification comment — an allowlist without
+    reasons decays into a mute button.  ``unused()`` reports entries that no
+    longer match any finding so the list shrinks as callsites get fixed."""
+    entries: Dict[Tuple[str, str, str], str]
+    path: str = ""
+
+    @staticmethod
+    def load(path: str) -> "Allowlist":
+        entries: Dict[Tuple[str, str, str], str] = {}
+        with open(path, encoding="utf-8") as f:
+            for lineno, raw in enumerate(f, 1):
+                line = raw.strip()
+                if not line or line.startswith("#"):
+                    continue
+                if "#" not in line or not line.split("#", 1)[1].strip():
+                    raise AllowlistError(
+                        f"{path}:{lineno}: allowlist entries need a "
+                        f"justification comment: {line!r}")
+                body, why = line.split("#", 1)
+                parts = body.split()
+                if len(parts) != 2 or "::" not in parts[1]:
+                    raise AllowlistError(
+                        f"{path}:{lineno}: expected "
+                        f"'RULE path::qualname  # why', got: {line!r}")
+                rule = parts[0]
+                fpath, qual = parts[1].split("::", 1)
+                entries[(rule, fpath, qual)] = why.strip()
+        return Allowlist(entries, path)
+
+    @staticmethod
+    def empty() -> "Allowlist":
+        return Allowlist({})
+
+    def covers(self, finding: Finding) -> bool:
+        return finding.key() in self.entries
+
+    def unused(self, findings: Sequence[Finding]) -> List[str]:
+        hit = {f.key() for f in findings}
+        return [f"{rule} {path}::{qual}"
+                for (rule, path, qual) in self.entries if
+                (rule, path, qual) not in hit]
+
+
+# ----------------------------------------------------------------------------
+# Small AST helpers shared by the passes
+# ----------------------------------------------------------------------------
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name for ``self.engine._lock``-style expressions, or None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def self_field(node: ast.AST) -> Optional[str]:
+    """``self.<field>`` -> field name (one level only), else None."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def func_defs(tree: ast.Module):
+    """(qualname, classname-or-None, FunctionDef) for every module-level
+    function and every method of every top-level class."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node.name, None, node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield f"{node.name}.{sub.name}", node.name, sub

@@ -1,0 +1,183 @@
+"""Lock-discipline lint: ``# guarded-by:`` annotations, checked lexically.
+
+Convention
+----------
+Mutable fields that are shared across threads are annotated where they are
+initialised (normally in ``__init__``)::
+
+    self._steps = 0          # guarded-by: _lock
+    self._cold_lens = {}     # guarded-by: engine._lock
+
+Every later read or write of ``self._steps`` must then appear lexically
+inside ``with self._lock:`` — or inside a method that documents the caller
+already holds it::
+
+    def _forget(self, key):  # requires: _lock
+
+``__init__`` itself is exempt (no concurrent readers exist before the
+constructor returns), as are methods named in the annotation's
+``requires`` list.  The lock name is matched textually against the ``with``
+item (``_lock`` matches ``with self._lock:``, ``engine._lock`` matches
+``with self.engine._lock:``), which is exactly as smart as a convention
+needs to be: the goal is that the locking *story* of a class is written
+down and mechanically cross-checked, not alias analysis.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.common import Finding, SourceFile, self_field
+
+RULE = "LOCK_GUARD"
+
+# Methods where unguarded access is always fine: construction and
+# finalisation run before/after any sharing.
+_EXEMPT_METHODS = {"__init__", "__post_init__", "__del__", "__repr__"}
+
+
+def _with_lock_names(item: ast.withitem) -> Optional[str]:
+    """``with self.<chain>:`` -> ``<chain>`` (e.g. ``_lock`` or
+    ``engine._lock``); None for non-self context managers."""
+    expr = item.context_expr
+    parts: List[str] = []
+    node = expr
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name) and node.id == "self" and parts:
+        return ".".join(reversed(parts))
+    return None
+
+
+def _collect_guarded(cls: ast.ClassDef, src: SourceFile) -> Dict[str, str]:
+    """field -> lock-name map from ``# guarded-by:`` annotations on
+    ``self.<field> = ...`` assignments anywhere in the class body."""
+    guarded: Dict[str, str] = {}
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            lock = src.annotation(node.lineno, "guarded-by")
+            if not lock:
+                continue
+            for tgt in targets:
+                field = self_field(tgt)
+                if field:
+                    guarded[field] = lock
+    return guarded
+
+
+def _requires(fn: ast.FunctionDef, src: SourceFile) -> Set[str]:
+    """Locks the caller of ``fn`` must hold (``# requires:`` anywhere on
+    the def header — which may span several lines when the signature
+    wraps)."""
+    body_start = fn.body[0].lineno if fn.body else fn.lineno + 1
+    for line in range(fn.lineno, body_start):
+        note = src.annotation(line, "requires")
+        if note:
+            return {part.strip() for part in note.split(",") if part.strip()}
+    return set()
+
+
+class _MethodChecker(ast.NodeVisitor):
+    """Walks one method body tracking the lexically-held lock set."""
+
+    def __init__(self, src: SourceFile, qualname: str,
+                 guarded: Dict[str, str], held: Set[str],
+                 init_lines: Set[int]):
+        self.src = src
+        self.qualname = qualname
+        self.guarded = guarded
+        self.held = held
+        self.init_lines = init_lines
+        self.findings: List[Finding] = []
+
+    def visit_With(self, node: ast.With) -> None:
+        added = []
+        for item in node.items:
+            name = _with_lock_names(item)
+            if name and name not in self.held:
+                self.held.add(name)
+                added.append(name)
+        for stmt in node.body:
+            self.visit(stmt)
+        for name in added:
+            self.held.discard(name)
+        # with-item expressions themselves (e.g. `with self._cv:`) are lock
+        # attrs, not guarded fields; don't visit them.
+
+    visit_AsyncWith = visit_With
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # Nested defs (closures) inherit the lexical lock set: a closure
+        # defined under `with self._lock:` but *invoked* later is rare
+        # enough that lexical checking is the right default.
+        for stmt in node.body:
+            self.visit(stmt)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        field = self_field(node)
+        if field and field in self.guarded:
+            lock = self.guarded[field]
+            if lock not in self.held and \
+                    node.lineno not in self.init_lines:
+                self.findings.append(Finding(
+                    RULE, self.src.path, node.lineno, self.qualname,
+                    f"access to 'self.{field}' (guarded-by: {lock}) "
+                    f"outside 'with self.{lock}'"))
+        self.generic_visit(node)
+
+
+def check_file(src: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    classes = {n.name: n for n in src.tree.body
+               if isinstance(n, ast.ClassDef)}
+
+    def merged_guarded(cls: ast.ClassDef, seen: Set[str]) -> Dict[str, str]:
+        """Guarded-field map including same-file base classes, so a
+        subclass method touching a base-declared field is still checked
+        (subclass annotations override the base's)."""
+        guarded: Dict[str, str] = {}
+        for b in cls.bases:
+            if isinstance(b, ast.Name) and b.id in classes \
+                    and b.id not in seen:
+                seen.add(b.id)
+                guarded.update(merged_guarded(classes[b.id], seen))
+        guarded.update(_collect_guarded(cls, src))
+        return guarded
+
+    # Annotated declaration lines are exempt wherever they live (the
+    # annotation *is* the declaration, usually in __init__).
+    decl_lines: Set[int] = set()
+    for node in classes.values():
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.Assign, ast.AnnAssign, ast.AugAssign)) \
+                    and src.annotation(sub.lineno, "guarded-by"):
+                for ln in range(sub.lineno, (sub.end_lineno or sub.lineno) + 1):
+                    decl_lines.add(ln)
+    for node in classes.values():
+        guarded = merged_guarded(node, {node.name})
+        if not guarded:
+            continue
+        for sub in node.body:
+            if not isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if sub.name in _EXEMPT_METHODS:
+                continue
+            qual = f"{node.name}.{sub.name}"
+            held = set(_requires(sub, src))
+            checker = _MethodChecker(src, qual, guarded, held, decl_lines)
+            for stmt in sub.body:
+                checker.visit(stmt)
+            findings.extend(checker.findings)
+    return findings
+
+
+def run(sources: List[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        findings.extend(check_file(src))
+    return findings

@@ -1,0 +1,270 @@
+"""Static lock-order pass: extract acquired-while-holding edges from the AST.
+
+This is the compile-time companion to ``repro.runtime.locks``: where the
+runtime ``OrderedLock`` records the acquisition chains that actually
+happened, this pass derives the chains that *can* happen — nested
+``with self._x: ... with self._y:`` blocks, plus acquisitions reached
+through same-class method calls (``with self._lifecycle: self._decode_once()``
+pulls in every lock ``_decode_once`` takes) — and feeds them into the same
+``LockOrderGraph``, so both halves raise on the same cycles with the same
+domain vocabulary (``ClassName._attr``).
+
+Lock attributes are discovered from ``__init__``: any field assigned a
+``make_lock(...)``/``make_rlock(...)``/``make_condition(...)`` call or a bare
+``threading.Lock()``/``RLock()``/``Condition()``.  When the factory is given
+a string literal, that literal *is* the domain name (this is how subclasses
+share the base class's domain); otherwise the domain is ``Class._attr``.
+Re-entrant domains (``make_rlock``/``RLock``) may legally self-nest, so
+self-edges on them are skipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.common import Finding, SourceFile, attr_chain, self_field
+from repro.runtime.locks import LockOrderError, LockOrderGraph
+
+RULE = "LOCK_ORDER"
+
+_FACTORIES = {"make_lock": False, "make_rlock": True, "make_condition": False}
+_THREADING = {"Lock": False, "RLock": True, "Condition": False}
+
+
+class _ClassInfo:
+    def __init__(self, name: str, bases: List[str]):
+        self.name = name
+        self.bases = bases
+        # lock attr -> (domain name, reentrant)
+        self.locks: Dict[str, Tuple[str, bool]] = {}
+        self.methods: Dict[str, ast.FunctionDef] = {}
+
+
+def _lock_decl(value: ast.expr) -> Optional[Tuple[Optional[str], bool]]:
+    """If ``value`` constructs a lock, return (literal-domain-or-None,
+    reentrant)."""
+    if not isinstance(value, ast.Call):
+        return None
+    fn = value.func
+    if isinstance(fn, ast.Name) and fn.id in _FACTORIES:
+        lit = None
+        if value.args and isinstance(value.args[0], ast.Constant) \
+                and isinstance(value.args[0].value, str):
+            lit = value.args[0].value
+        return lit, _FACTORIES[fn.id]
+    if isinstance(fn, ast.Attribute) and fn.attr in _THREADING:
+        chain = attr_chain(fn)
+        if chain and chain.split(".")[0] in ("threading", "locks"):
+            return None, _THREADING[fn.attr]
+    return None
+
+
+def _collect_classes(sources: List[SourceFile]) -> Dict[str, _ClassInfo]:
+    classes: Dict[str, _ClassInfo] = {}
+    for src in sources:
+        for node in src.tree.body:
+            if not isinstance(node, ast.ClassDef):
+                continue
+            bases = [b.id for b in node.bases if isinstance(b, ast.Name)]
+            info = _ClassInfo(node.name, bases)
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    info.methods[sub.name] = sub
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Assign):
+                    decl = _lock_decl(sub.value)
+                    if decl is None:
+                        continue
+                    lit, reentrant = decl
+                    for tgt in sub.targets:
+                        field = self_field(tgt)
+                        if field:
+                            info.locks[field] = (
+                                lit or f"{node.name}.{field}", reentrant)
+            classes[node.name] = info
+    return classes
+
+
+def _resolve_lock(classes: Dict[str, _ClassInfo], cls: str, attr: str
+                  ) -> Optional[Tuple[str, bool]]:
+    """Find lock ``attr`` on ``cls`` or its (named) bases."""
+    seen: Set[str] = set()
+    queue = [cls]
+    while queue:
+        name = queue.pop(0)
+        if name in seen or name not in classes:
+            continue
+        seen.add(name)
+        info = classes[name]
+        if attr in info.locks:
+            return info.locks[attr]
+        queue.extend(info.bases)
+    return None
+
+
+def _resolve_method(classes: Dict[str, _ClassInfo], cls: str, name: str
+                    ) -> Optional[Tuple[str, ast.FunctionDef]]:
+    seen: Set[str] = set()
+    queue = [cls]
+    while queue:
+        cname = queue.pop(0)
+        if cname in seen or cname not in classes:
+            continue
+        seen.add(cname)
+        info = classes[cname]
+        if name in info.methods:
+            return cname, info.methods[name]
+        queue.extend(info.bases)
+    return None
+
+
+def _with_self_lock(item: ast.withitem, classes: Dict[str, _ClassInfo],
+                    cls: str) -> Optional[Tuple[str, bool]]:
+    """``with self.<attr>:`` where attr is a known lock of cls -> domain."""
+    expr = item.context_expr
+    field = self_field(expr)
+    if field is None:
+        return None
+    return _resolve_lock(classes, cls, field)
+
+
+def _method_acquires(classes: Dict[str, _ClassInfo]
+                     ) -> Dict[Tuple[str, str], Set[Tuple[str, bool]]]:
+    """Fixpoint: for each (class, method), every lock domain it may acquire
+    directly or through self-method calls (callees resolved dynamically on
+    the *concrete* class, so subclass overrides are honoured)."""
+    acq: Dict[Tuple[str, str], Set[Tuple[str, bool]]] = {}
+
+    def direct(cls: str, fn: ast.FunctionDef
+               ) -> Tuple[Set[Tuple[str, bool]], Set[str]]:
+        locks: Set[Tuple[str, bool]] = set()
+        calls: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    dom = _with_self_lock(item, classes, cls)
+                    if dom:
+                        locks.add(dom)
+            elif isinstance(node, ast.Call):
+                field = self_field(node.func)
+                if field:
+                    calls.add(field)
+        return locks, calls
+
+    tables: Dict[Tuple[str, str], Tuple[Set[Tuple[str, bool]], Set[str]]] = {}
+    for cname, _info in classes.items():
+        # Seed with *all* methods visible on the class, including inherited
+        # ones, attributed to the concrete class (dynamic dispatch).
+        seen: Set[str] = set()
+        queue = [cname]
+        while queue:
+            base = queue.pop(0)
+            if base not in classes:
+                continue
+            for mname, fn in classes[base].methods.items():
+                if mname not in seen:
+                    seen.add(mname)
+                    tables[(cname, mname)] = direct(cname, fn)
+            queue.extend(classes[base].bases)
+
+    for key, (locks, _calls) in tables.items():
+        acq[key] = set(locks)
+    changed = True
+    while changed:
+        changed = False
+        for (cname, mname), (_locks, calls) in tables.items():
+            cur = acq[(cname, mname)]
+            for callee in calls:
+                extra = acq.get((cname, callee))
+                if extra and not extra <= cur:
+                    cur |= extra
+                    changed = True
+    return acq
+
+
+def extract_edges(sources: List[SourceFile]
+                  ) -> List[Tuple[str, str, str, bool]]:
+    """(held-domain, acquired-domain, where, same-domain-reentrant) edges
+    from every nested-with and with+self-call site."""
+    classes = _collect_classes(sources)
+    acq = _method_acquires(classes)
+    src_of: Dict[str, str] = {}
+    for src in sources:
+        for node in src.tree.body:
+            if isinstance(node, ast.ClassDef):
+                src_of[node.name] = src.path
+
+    edges: List[Tuple[str, str, str, bool]] = []
+
+    def inner_domains(body: List[ast.stmt], cls: str
+                      ) -> List[Tuple[Tuple[str, bool], int]]:
+        out: List[Tuple[Tuple[str, bool], int]] = []
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.With, ast.AsyncWith)):
+                    for item in node.items:
+                        dom = _with_self_lock(item, classes, cls)
+                        if dom:
+                            out.append((dom, node.lineno))
+                elif isinstance(node, ast.Call):
+                    field = self_field(node.func)
+                    if field:
+                        for dom in sorted(acq.get((cls, field), ())):
+                            out.append((dom, node.lineno))
+        return out
+
+    for cname, _info in classes.items():
+        path = src_of.get(cname, "?")
+        seen_m: Set[str] = set()
+        queue = [cname]
+        while queue:
+            base = queue.pop(0)
+            if base not in classes:
+                continue
+            for mname, fn in classes[base].methods.items():
+                if mname in seen_m:
+                    continue
+                seen_m.add(mname)
+                for node in ast.walk(fn):
+                    if not isinstance(node, (ast.With, ast.AsyncWith)):
+                        continue
+                    held = [_with_self_lock(i, classes, cname)
+                            for i in node.items]
+                    held = [h for h in held if h]
+                    if not held:
+                        continue
+                    inner = inner_domains(node.body, cname)
+                    for hdom, hre in held:
+                        for (idom, ire), line in inner:
+                            if idom == hdom:
+                                # re-entrant domains may legally self-nest
+                                edges.append((hdom, idom,
+                                              f"{path}:{line}",
+                                              hre and ire))
+                            else:
+                                edges.append((hdom, idom,
+                                              f"{path}:{line}", False))
+            queue.extend(classes[base].bases)
+    return edges
+
+
+def run(sources: List[SourceFile],
+        graph: Optional[LockOrderGraph] = None) -> List[Finding]:
+    """Feed statically-extracted edges into a LockOrderGraph; each rejected
+    edge (cycle or illegal same-domain nesting) becomes a finding."""
+    g = graph if graph is not None else LockOrderGraph()
+    findings: List[Finding] = []
+    reported: Set[str] = set()
+    for held, acquired, where, reentrant_self in extract_edges(sources):
+        if reentrant_self:
+            continue
+        try:
+            g.add_edge(held, acquired, where=where)
+        except LockOrderError as e:
+            msg = str(e)
+            if msg not in reported:
+                reported.add(msg)
+                path, _, line = where.partition(":")
+                findings.append(Finding(
+                    RULE, path, int(line or 0), f"{held}->{acquired}", msg))
+    return findings

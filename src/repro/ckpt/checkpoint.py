@@ -171,7 +171,7 @@ def restore_checkpoint(directory: str, step: int, target_tree: Any,
     shard_list = jax.tree.leaves(shardings) if shardings is not None \
         else [None] * len(leaves)
     out = []
-    for name, leaf, shd in zip(names, leaves, shard_list):
+    for name, _leaf, shd in zip(names, leaves, shard_list):
         entry = manifest["leaves"].get(name)
         if entry is None:
             raise KeyError(f"checkpoint missing leaf {name!r}")

@@ -26,6 +26,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 
+from repro.runtime.locks import make_condition, make_lock
+
 
 @dataclasses.dataclass
 class TaskRecord:
@@ -67,15 +69,18 @@ class BackgroundExecutor:
         self.backpressure = backpressure
         self.max_retries = max_retries
         self._q: "queue.Queue[_Task]" = queue.Queue(maxsize=max_inflight)
-        self._history: List[TaskRecord] = []
-        self._lock = threading.Lock()
+        # _lock guards history/drop accounting; _cv guards in-flight counts.
+        # They are never nested — keep it that way, or the lock-order
+        # sanitizer will record an edge between them.
+        self._lock = make_lock("BackgroundExecutor._lock")
+        self._history: List[TaskRecord] = []    # guarded-by: _lock
         self._stop = threading.Event()
-        self._dropped = 0
+        self._dropped = 0                       # guarded-by: _lock
         # In-flight accounting for drain(): counts accepted-but-unfinished
         # tasks under a condition variable (queue.Queue.unfinished_tasks is
         # undocumented, and join() has no timeout).
-        self._cv = threading.Condition()
-        self._inflight = 0
+        self._cv = make_condition("BackgroundExecutor._cv")
+        self._inflight = 0                      # guarded-by: _cv
         self._threads = [
             threading.Thread(target=self._worker, daemon=True,
                              name=f"sidecar-{i}")
@@ -95,7 +100,19 @@ class BackgroundExecutor:
                     pass
         task = _Task(name, fn, arrays, self.max_retries)
         with self._cv:
-            self._inflight += 1       # count before enqueue: no drain races
+            rejected = self._stop.is_set()
+            if not rejected:
+                self._inflight += 1   # count before enqueue: no drain races
+        if rejected:
+            # After shutdown no worker will ever run this; fail it out
+            # immediately so callers waiting on task.done cannot hang.
+            task.record.error = "rejected: executor shut down"
+            task.record.finished_at = time.time()
+            task.done.set()
+            with self._lock:
+                self._dropped += 1
+                self._history.append(task.record)
+            return task
         while True:
             try:
                 self._q.put_nowait(task)
@@ -184,8 +201,28 @@ class BackgroundExecutor:
         }
 
     def shutdown(self, drain: bool = True):
+        """Stop the workers.  Idempotent: a second call is a no-op sweep.
+
+        With ``drain=False`` any queued-but-unstarted task is failed out
+        (error recorded, ``done`` set, counted in ``_inflight``'s release)
+        so a later ``drain()`` or ``task.done.wait()`` cannot hang on work
+        no worker will ever run."""
         if drain:
             self.drain()
         self._stop.set()
         for t in self._threads:
             t.join(timeout=2.0)
+        # Workers have exited (or timed out mid-task); cancel what never
+        # started so every accepted task still reaches a terminal state.
+        while True:
+            try:
+                task = self._q.get_nowait()
+            except queue.Empty:
+                break
+            task.record.error = "cancelled: executor shut down"
+            task.record.finished_at = time.time()
+            task.done.set()
+            with self._lock:
+                self._dropped += 1
+                self._history.append(task.record)
+            self._finish_one()

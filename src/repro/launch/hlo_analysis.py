@@ -94,7 +94,7 @@ def _split_computations(hlo: str) -> Dict[str, List[str]]:
 def _trip_counts(comps: Dict[str, List[str]]) -> Dict[str, int]:
     """body-computation name -> trip count (best-effort constant parse)."""
     trips: Dict[str, int] = {}
-    for name, lines in comps.items():
+    for _name, lines in comps.items():
         for line in lines:
             if " while(" not in line:
                 continue

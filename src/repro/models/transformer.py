@@ -256,10 +256,9 @@ def write_page(pstate: Dict[str, Any], page, blob: Dict[str, Any]
             return jax.lax.dynamic_update_index_in_dim(
                 dst, src.astype(dst.dtype), page, axis)
         return f
-    out = {"slots": jax.tree.map(put(1), pstate["slots"], blob["slots"]),
-           "tail": jax.tree.map(put(0), pstate["tail"], blob["tail"]),
-           "pos": pstate["pos"]}
-    return out
+    return {"slots": jax.tree.map(put(1), pstate["slots"], blob["slots"]),
+            "tail": jax.tree.map(put(0), pstate["tail"], blob["tail"]),
+            "pos": pstate["pos"]}
 
 
 def load_prefix_pages(solo: Dict[str, Any], pstate: Dict[str, Any],
@@ -421,8 +420,8 @@ def _run_stack(
             aux = aux0
             acc = []
             for r in range(reps):
-                p_slice = jax.tree.map(lambda a: a[r], layer_params)
-                s_slice = (jax.tree.map(lambda a: a[r], slot_states)
+                p_slice = jax.tree.map(lambda a, r=r: a[r], layer_params)
+                s_slice = (jax.tree.map(lambda a, r=r: a[r], slot_states)
                            if states is not None else None)
                 (x, aux), ns = fn((x, aux), (p_slice,) if states is None
                                   else (p_slice, s_slice))

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.config.model import ModelConfig
 from repro.config.run import ServeConfig
+from repro.runtime.locks import make_lock
 from repro.models.transformer import (
     decode_state_nbytes, init_decode_state, init_paged_decode_state,
     supports_paging)
@@ -83,8 +84,8 @@ class CacheBackend:
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig):
         self.cfg, self.scfg = cfg, scfg
         self.engine: Any = None
-        self._prompt_tokens = 0
-        self._hit_tokens = 0
+        self._prompt_tokens = 0       # guarded-by: engine._lock
+        self._hit_tokens = 0          # guarded-by: engine._lock
 
     def bind(self, engine) -> None:
         self.engine = engine
@@ -255,7 +256,7 @@ class PagedKVBackend(CacheBackend):
         eng.states = self._write_page_prog(
             eng.states, jnp.asarray(page, jnp.int32), blob)
         self.pool.register(chain, page)
-        self.pool.faults += 1
+        self.pool.note_fault()
         return page
 
     # -- admission -------------------------------------------------------------
@@ -526,52 +527,63 @@ class SnapshotPool:
         if capacity < 1:
             raise ValueError("snapshot pool needs capacity >= 1")
         self.capacity = capacity
-        self._store: "OrderedDict[bytes, Tuple[int, Any]]" = OrderedDict()
-        self.hits = 0
-        self.lookups = 0
-        self.evictions = 0
+        # The engine loop registers/restores snapshots while router threads
+        # probe (contains/lengths) and stats() readers race the loop.  The
+        # evict callback runs under this lock and must not re-enter the pool.
+        self._lock = make_lock("SnapshotPool._lock")
+        self._store: "OrderedDict[bytes, Tuple[int, Any]]" = OrderedDict()  # guarded-by: _lock
+        self.hits = 0        # guarded-by: _lock
+        self.lookups = 0     # guarded-by: _lock
+        self.evictions = 0   # guarded-by: _lock
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
     def lengths(self) -> List[int]:
         """Distinct boundary lengths currently resident."""
-        return sorted({ln for ln, _ in self._store.values()}, reverse=True)
+        with self._lock:
+            return sorted({ln for ln, _ in self._store.values()},
+                          reverse=True)
 
     def get(self, key: bytes) -> Optional[Any]:
         """Hot hit (LRU touch) or None."""
-        self.lookups += 1
-        ent = self._store.get(key)
-        if ent is None:
-            return None
-        self.hits += 1
-        self._store.move_to_end(key)
-        return ent[1]
+        with self._lock:
+            self.lookups += 1
+            ent = self._store.get(key)
+            if ent is None:
+                return None
+            self.hits += 1
+            self._store.move_to_end(key)
+            return ent[1]
 
     def contains(self, key: bytes) -> bool:
         """Read-only probe: no LRU touch, no counters (router affinity)."""
-        return key in self._store
+        with self._lock:
+            return key in self._store
 
     def put(self, key: bytes, length: int, state: Any,
             evict_cb=None) -> None:
         """Register a snapshot (newest wins on duplicate keys), evicting the
         LRU entry over capacity through ``evict_cb(key, length, state)``."""
-        self._store[key] = (length, state)
-        self._store.move_to_end(key)
-        while len(self._store) > self.capacity:
-            k, (ln, st) = self._store.popitem(last=False)
-            if evict_cb is not None:
-                evict_cb(k, ln, st)
-            self.evictions += 1
+        with self._lock:
+            self._store[key] = (length, state)
+            self._store.move_to_end(key)
+            while len(self._store) > self.capacity:
+                k, (ln, st) = self._store.popitem(last=False)
+                if evict_cb is not None:
+                    evict_cb(k, ln, st)
+                self.evictions += 1
 
     def stats(self) -> Dict[str, Any]:
-        return {
-            "slots": self.capacity,
-            "resident": len(self._store),
-            "hits": self.hits,
-            "lookups": self.lookups,
-            "evictions": self.evictions,
-        }
+        with self._lock:
+            return {
+                "slots": self.capacity,
+                "resident": len(self._store),
+                "hits": self.hits,
+                "lookups": self.lookups,
+                "evictions": self.evictions,
+            }
 
 
 class SnapshotBackend(CacheBackend):
@@ -605,12 +617,16 @@ class SnapshotBackend(CacheBackend):
         super().__init__(cfg, scfg)
         self.pool = SnapshotPool(max(1, scfg.snapshot_slots))
         self.cold = ColdTier(scfg.cold_pages) if scfg.cold_pages > 0 else None
-        self._cold_lens: Dict[bytes, int] = {}
+        # Cold-boundary bookkeeping and tier counters are mutated on the
+        # engine loop (spill/fault) and read from router threads
+        # (_candidate_lengths via probe) and stats() — the engine's lock
+        # guards them, like the hit counters in CacheBackend.
+        self._cold_lens: Dict[bytes, int] = {}   # guarded-by: engine._lock
         self._reuse = (scfg.prefix_cache and cfg.frontend == "none"
                        and not cfg.is_encoder_decoder)
         self._state_bytes: Optional[int] = None
-        self.faults = 0
-        self.spills = 0
+        self.faults = 0      # guarded-by: engine._lock
+        self.spills = 0      # guarded-by: engine._lock
 
     def build_device_plane(self) -> None:
         eng = self.engine
@@ -631,8 +647,9 @@ class SnapshotBackend(CacheBackend):
         if self.cold is None:
             return
         self.cold.put(key, state)
-        self._cold_lens[key] = length
-        self.spills += 1
+        with self.engine._lock:
+            self._cold_lens[key] = length
+            self.spills += 1
         leaves, treedef = jax.tree.flatten(state)
         self.engine.executor.submit(
             f"snap.spill/{key.hex()[:8]}",
@@ -649,10 +666,13 @@ class SnapshotBackend(CacheBackend):
         blob = self.cold.take(key)
         if blob is None:
             return None
-        self._cold_lens.pop(key, None)
+        with self.engine._lock:
+            self._cold_lens.pop(key, None)
+            self.faults += 1
         state = jax.tree.map(jnp.asarray, blob)
+        # Outside engine._lock: put() may evict -> _spill -> engine._lock
+        # (re-entering here would self-deadlock the non-reentrant lock).
         self.pool.put(key, length, state, evict_cb=self._spill)
-        self.faults += 1
         return state
 
     # -- prefix matching -------------------------------------------------------
@@ -662,11 +682,15 @@ class SnapshotBackend(CacheBackend):
         entries)."""
         lens = set(self.pool.lengths())
         if self.cold is not None:
-            stale = [k for k, ln in self._cold_lens.items()
-                     if not self.cold.contains(k)]
-            for k in stale:
-                del self._cold_lens[k]
-            lens.update(self._cold_lens.values())
+            # Snapshot the bookkeeping, probe the cold tier *outside* the
+            # engine lock (ColdTier has its own), then prune under it.
+            with self.engine._lock:
+                items = list(self._cold_lens.items())
+            stale = [k for k, _ln in items if not self.cold.contains(k)]
+            with self.engine._lock:
+                for k in stale:
+                    self._cold_lens.pop(k, None)
+                lens.update(self._cold_lens.values())
         return sorted(lens, reverse=True)
 
     def _match(self, prompt: np.ndarray) -> Tuple[int, Optional[Any]]:
@@ -857,9 +881,11 @@ class SnapshotBackend(CacheBackend):
         pass                # per-slot state is part of the batched tree
 
     def stats(self) -> Dict[str, Any]:
+        with self.engine._lock:
+            faults, spills = self.faults, self.spills
         return {
-            "snapshot_pool": dict(self.pool.stats(), faults=self.faults,
-                                  spills=self.spills),
+            "snapshot_pool": dict(self.pool.stats(), faults=faults,
+                                  spills=spills),
             "cold_snapshots": (len(self.cold) if self.cold is not None
                                else 0),
             "prefix_hit_rate": self._hit_rate(),

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -55,6 +56,7 @@ from repro.config.run import ServeConfig
 from repro.core.endpoint import ShardedStore
 from repro.core.executor import BackgroundExecutor
 from repro.models.transformer import ExecPolicy
+from repro.runtime.locks import make_lock
 from repro.serve.disagg import PrefillWorker
 from repro.serve.engines import PagedEngine
 from repro.serve.kvpool import pack_handoff
@@ -222,22 +224,28 @@ class ServeCluster:
         self._default_tenant = TenantSpec("default", priority=1)
 
         self._crid = itertools.count()
+        # The driver (submit/step/run) is single-threaded by contract — the
+        # queue and dispatch maps below stay unguarded on that thread.
+        # Results, busy accounting and QoS counters ARE read concurrently
+        # (result()/stats()/busy_seconds() from bench and test threads), so
+        # they get the cluster lock.
         self._pending: List[ClusterRequest] = []      # cluster-level queue
         self._inflight: Dict[int, ClusterRequest] = {}  # crid -> dispatched
         self._by_replica: List[Dict[int, ClusterRequest]] = [
             {} for _ in range(n_total)]               # rid -> cr, per replica
-        self._results: Dict[int, Dict[str, Any]] = {}
+        self._lock = make_lock("ServeCluster._lock")
+        self._results: Dict[int, Dict[str, Any]] = {}  # guarded-by: _lock
         self.max_pending = scfg.max_queue * n_total
 
         # Endpoint busy accounting for the parallel-world wall clock.
-        self.busy_s = [0.0] * n_total
-        self.prefill_busy_s = 0.0
+        self.busy_s = [0.0] * n_total       # guarded-by: _lock
+        self.prefill_busy_s = 0.0           # guarded-by: _lock
         # QoS / lifecycle counters.
-        self.preemptions = 0
-        self.death_requeues = 0
-        self.rate_limited = 0
-        self.deaths = 0
-        self._closed = False
+        self.preemptions = 0                # guarded-by: _lock
+        self.death_requeues = 0             # guarded-by: _lock
+        self.rate_limited = 0               # guarded-by: _lock
+        self.deaths = 0                     # guarded-by: _lock
+        self._closed = threading.Event()
 
     # -- admission -------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, tenant: str = "default",
@@ -249,7 +257,7 @@ class ServeCluster:
         step.  Raises ``QueueFull`` when the tenant is over its rate limit
         or the cluster queue is at capacity — callers get backpressure,
         never a hang."""
-        if self._closed:
+        if self._closed.is_set():
             raise RuntimeError("cluster is closed; no new submissions")
         if model not in self.models:
             raise ValueError(
@@ -266,7 +274,8 @@ class ServeCluster:
         spec = self.tenants.get(tenant, self._default_tenant)
         bucket = self._buckets.get(tenant)
         if bucket is not None and not bucket.try_take():
-            self.rate_limited += 1
+            with self._lock:
+                self.rate_limited += 1
             raise QueueFull(
                 f"tenant {tenant!r} over rate limit "
                 f"({spec.rate_limit:.3g} req/s, burst {spec.burst})")
@@ -370,7 +379,8 @@ class ServeCluster:
         if prefill is not None:
             t0 = time.perf_counter()
             h = prefill.prefill_to_handoff(rid, prompt, max_new, cr.sampling)
-            self.prefill_busy_s += time.perf_counter() - t0
+            with self._lock:
+                self.prefill_busy_s += time.perf_counter() - t0
             if h is not None:       # worker out of capacity -> local prefill
                 self.handoff_store.put(f"kv/r{idx}/{rid}", pack_handoff(h))
         return rid
@@ -390,7 +400,8 @@ class ServeCluster:
             return False
         self._withdraw(idx, victim, req)
         self._requeue(victim, death=False)
-        self.preemptions += 1
+        with self._lock:
+            self.preemptions += 1
         return True
 
     def _withdraw(self, idx: int, cr: ClusterRequest, req: Request) -> None:
@@ -408,7 +419,7 @@ class ServeCluster:
         """Dispatch + one decode step on every live replica.  Returns False
         once fully idle.  A replica whose step raises is marked dead and its
         requests are requeued on the survivors — the cluster keeps serving."""
-        if self._closed:
+        if self._closed.is_set():
             return False
         progressed = self._dispatch() > 0
         for i, rep in enumerate(self.replicas):
@@ -421,7 +432,8 @@ class ServeCluster:
                 self._on_replica_death(i, e)
                 progressed = True
                 continue
-            self.busy_s[i] += time.perf_counter() - t0
+            with self._lock:
+                self.busy_s[i] += time.perf_counter() - t0
             progressed = worked or progressed
             self._harvest(i)
         return progressed or bool(self._pending) or bool(self._inflight)
@@ -448,7 +460,8 @@ class ServeCluster:
         """Mark a replica dead, drop its pending handoffs, requeue its
         in-flight requests (partial outputs preserved) on the survivors."""
         self.alive[idx] = False
-        self.deaths += 1
+        with self._lock:
+            self.deaths += 1
         stranded = list(self._by_replica[idx].values())
         rep = self.replicas[idx]
         for cr in stranded:
@@ -468,7 +481,8 @@ class ServeCluster:
                 cr.replica, cr.rid = -1, -1
                 cr.requeues += 1
                 self._pending.append(cr)
-                self.death_requeues += 1
+                with self._lock:
+                    self.death_requeues += 1
             else:
                 self._finish(cr)
         self._by_replica[idx].clear()
@@ -494,15 +508,18 @@ class ServeCluster:
         }
         if cr.error:
             payload["error"] = cr.error
-        self._results[cr.crid] = payload
+        with self._lock:
+            self._results[cr.crid] = payload
 
     # -- results / introspection ----------------------------------------------
     def result(self, crid: int) -> Dict[str, Any]:
-        if crid not in self._results:
+        with self._lock:
+            payload = self._results.get(crid)
+        if payload is None:
             raise RuntimeError(
                 f"request {crid} is still queued/decoding; drive "
                 "step()/run() to completion before fetching its result")
-        return self._results[crid]
+        return payload
 
     def request(self, crid: int) -> ClusterRequest:
         for cr in self._pending:
@@ -520,41 +537,49 @@ class ServeCluster:
         """Per-endpoint busy time this process spent *simulating* parallel
         endpoints serially.  ``wall_parallel ~= wall_serial - sum(values)
         + max(values)`` is the benchmark's scaling estimator."""
-        out = {f"r{i}": s for i, s in enumerate(self.busy_s)}
-        if self.prefill is not None:
-            out["prefill"] = self.prefill_busy_s
+        with self._lock:
+            out = {f"r{i}": s for i, s in enumerate(self.busy_s)}
+            if self.prefill is not None:
+                out["prefill"] = self.prefill_busy_s
         return out
 
     def stats(self) -> Dict[str, Any]:
-        return {
-            "replicas": [
-                dict(rep.stats(), alive=self.alive[i],
-                     busy_s=round(self.busy_s[i], 4),
-                     model=self._model_of[i])
-                for i, rep in enumerate(self.replicas)],
-            "pending": len(self._pending),
-            "inflight": len(self._inflight),
-            "completed": len(self._results),
-            "qos": {
+        # Snapshot guarded counters first; rep.stats() takes per-engine
+        # locks, so it runs outside ours (ServeCluster._lock stays a leaf).
+        with self._lock:
+            busy = list(self.busy_s)
+            prefill_busy = self.prefill_busy_s
+            completed = len(self._results)
+            qos = {
                 "preemptions": self.preemptions,
                 "death_requeues": self.death_requeues,
                 "rate_limited": self.rate_limited,
                 "replica_deaths": self.deaths,
-            },
+            }
+        return {
+            "replicas": [
+                dict(rep.stats(), alive=self.alive[i],
+                     busy_s=round(busy[i], 4),
+                     model=self._model_of[i])
+                for i, rep in enumerate(self.replicas)],
+            "pending": len(self._pending),
+            "inflight": len(self._inflight),
+            "completed": completed,
+            "qos": qos,
             "router": {
                 "picks": dict(self.router.planner.picks),
                 "rejections": self.router.planner.rejections,
             },
             "prefill_endpoint": (
                 {"pool": self.prefill.pool.stats(),
-                 "busy_s": round(self.prefill_busy_s, 4)}
+                 "busy_s": round(prefill_busy, 4)}
                 if self.prefill is not None else None),
         }
 
     def close(self) -> None:
-        if self._closed:
+        if self._closed.is_set():
             return
-        self._closed = True
+        self._closed.set()
         for cr in list(self._inflight.values()) + self._pending:
             if not cr.done:
                 cr.error = "cluster closed before completion"
@@ -584,7 +609,7 @@ class ServeCluster:
                 except QueueFull:
                     self.step()
         self.run()
-        return {i: self._results[crid]["tokens"]
+        return {i: self.result(crid)["tokens"]
                 for i, crid in enumerate(crids)}
 
 

@@ -111,7 +111,9 @@ class DisaggregatedEngine(PagedEngine):
         n_params = sum(int(x.size) for x in jax.tree.leaves(params))
         self.router = PrefillRoutePlanner(flops_per_token=2.0 * n_params,
                                           profile=profile)
-        self.prefill_seconds = 0.0      # time spent on the other endpoint
+        # Time spent on the other endpoint; bumped on the admit path while
+        # stats() readers may live on other threads.
+        self.prefill_seconds = 0.0      # guarded-by: _lock
         # rid -> routing decision, so a deferred admission retries with the
         # same placement instead of re-deciding (and re-counting) each
         # attempt; entries clear once the request is actually admitted.
@@ -146,7 +148,8 @@ class DisaggregatedEngine(PagedEngine):
                 t0 = time.perf_counter()
                 handoff = self.prefill.prefill_to_handoff(
                     req.rid, req.prompt, req.max_new_tokens, req.sampling)
-                self.prefill_seconds += time.perf_counter() - t0
+                with self._lock:
+                    self.prefill_seconds += time.perf_counter() - t0
                 if handoff is not None:
                     # Publish-then-consume through the store on purpose,
                     # even though both endpoints share this process: the
@@ -165,9 +168,11 @@ class DisaggregatedEngine(PagedEngine):
     # -- introspection / lifecycle ---------------------------------------------
     def stats(self) -> Dict[str, Any]:
         s = super().stats()
+        with self._lock:
+            busy = self.prefill_seconds
         s["prefill_endpoint"] = {
             "pool": self.prefill.pool.stats(),
-            "busy_s": round(self.prefill_seconds, 4),
+            "busy_s": round(busy, 4),
         }
         return s
 

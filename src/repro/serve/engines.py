@@ -37,6 +37,7 @@ from repro.config.run import ServeConfig
 from repro.core.endpoint import ShardedStore
 from repro.core.executor import BackgroundExecutor
 from repro.models.transformer import ExecPolicy, init_decode_state
+from repro.runtime.locks import make_lock, make_rlock
 from repro.serve import programs
 from repro.serve.backends import make_backend
 from repro.serve.kvpool import unpack_handoff
@@ -85,27 +86,29 @@ class ContinuousEngine:
         # slot->endpoint ownership is static; compute the balance once so
         # stats() stays O(1) on the decode loop
         self._shard_balance = self.store.balance()
-        self.records: List[Dict[str, Any]] = []
-        self.stats_log: List[Dict[str, Any]] = []
         # One lock covers everything mutated by the engine loop and read from
         # other threads (records, stats_log, step/token counters): stats()
         # and result() may legally race the loop thread.
-        self._lock = threading.Lock()
+        self._lock = make_lock("ContinuousEngine._lock")
+        self.records: List[Dict[str, Any]] = []        # guarded-by: _lock
+        self.stats_log: List[Dict[str, Any]] = []      # guarded-by: _lock
 
         self._rid = itertools.count()
-        self._requests: Dict[int, Request] = {}
-        self._steps = 0
-        self._tokens_out = 0
-        self._closed = False
-        self._loop_error: Optional[BaseException] = None
+        self._requests: Dict[int, Request] = {}        # guarded-by: _admission
+        self._steps = 0                                # guarded-by: _lock
+        self._tokens_out = 0                           # guarded-by: _lock
+        # Set-once close latch: checked lock-free on the hot step path, set
+        # under _admission so no submit() can slip past a closing engine.
+        self._closed = threading.Event()
+        self._loop_error: Optional[BaseException] = None  # guarded-by: _lock
         # Serializes the step loop against close()/failure teardown: a
         # close() racing a mid-flight step must not release slots the loop
         # is still decoding (RLock: the step exception path re-enters via
         # _fail_pending).  submit() deliberately does NOT take it — a
         # producer must never stall behind a device step — so queue
         # admission vs. teardown atomicity gets its own small lock.
-        self._lifecycle = threading.RLock()
-        self._admission = threading.Lock()
+        self._lifecycle = make_rlock("ContinuousEngine._lifecycle")
+        self._admission = make_lock("ContinuousEngine._admission")
 
     def _build_device_plane(self) -> None:
         """Fast path: two fixed-shape fused programs (admit retraces once per
@@ -144,7 +147,7 @@ class ContinuousEngine:
         # Atomic against _fail_pending's teardown so a request can never
         # slip into the queue after close() already failed everything.
         with self._admission:
-            if self._closed:
+            if self._closed.is_set():
                 raise RuntimeError("engine is closed; no new submissions")
             self.scheduler.push(req)      # raises QueueFull at capacity
             self._requests[req.rid] = req
@@ -166,15 +169,16 @@ class ContinuousEngine:
         unknown or already finished.  The cluster's QoS plane uses this to
         evict best-effort work under paid-class pressure."""
         with self._lifecycle:
-            req = self._requests.get(rid)
-            if req is None or req.done:
-                return None
+            with self._admission:
+                req = self._requests.get(rid)
+                if req is None or req.done:
+                    return None
+                del self._requests[rid]
             if req.slot >= 0 and self.slots.get(req.slot) is req:
                 self._release_slot(req.slot)
                 req.slot = -1
             else:
                 self.scheduler.remove(req)
-            del self._requests[rid]
             return req
 
     def _admit(self) -> int:
@@ -281,13 +285,14 @@ class ContinuousEngine:
         reporting the request as forever "still decoding") and every
         pending request gets a terminal error record before re-raising."""
         with self._lifecycle:
-            if self._closed:
+            if self._closed.is_set():
                 return False
             try:
                 admitted = self._admit()
                 return self._decode_once() or admitted > 0
             except Exception as e:
-                self._loop_error = e
+                with self._lock:
+                    self._loop_error = e
                 self._fail_pending(
                     f"decode loop died: {type(e).__name__}: {e}")
                 raise
@@ -359,19 +364,23 @@ class ContinuousEngine:
         if wait and not self.executor.drain():
             raise TimeoutError(
                 f"sidecar drain timed out before req/{rid} was recorded")
-        req = self._requests.get(rid)
+        with self._admission:
+            req = self._requests.get(rid)
         if req is not None and not req.done:
-            if self._loop_error is not None:
+            with self._lock:
+                loop_error = self._loop_error
+            if loop_error is not None:
                 raise RuntimeError(
                     f"request {rid} cannot complete: the decode loop died"
-                ) from self._loop_error
+                ) from loop_error
             raise RuntimeError(
                 f"request {rid} is still queued/decoding; drive step()/run() "
                 "to completion before fetching its result")
         return self.store.get(f"req/{rid}")
 
     def request(self, rid: int) -> Request:
-        return self._requests[rid]
+        with self._admission:
+            return self._requests[rid]
 
     def stats(self) -> Dict[str, Any]:
         # Counters are mutated by the engine loop thread; snapshot them under
@@ -408,8 +417,12 @@ class ContinuousEngine:
         wake with an error payload instead of hanging, then drain the
         sidecar."""
         with self._lifecycle:       # wait out any in-flight step first
-            if not self._closed:
-                self._closed = True
+            if not self._closed.is_set():
+                # Latch under _admission: a submit() that got past the latch
+                # check is in the queue before _fail_pending sweeps it; one
+                # that didn't will raise.  Then fail everything pending.
+                with self._admission:
+                    self._closed.set()
                 self._fail_pending("engine closed before completion")
         self.executor.drain()
         if self._own_executor:
@@ -431,7 +444,7 @@ class ContinuousEngine:
                     break
                 except QueueFull:
                     self.step()           # make room: drain one decode step
-            out[i] = self._requests[rid]
+            out[i] = self.request(rid)
         self.run()
         self.executor.drain()
         return out
@@ -484,10 +497,13 @@ class PagedEngine(ContinuousEngine):
         self.handoff_ns = handoff_ns
         self.handoff_store = (ShardedStore(list(handoff_endpoints))
                               if handoff_endpoints is not None else None)
-        self._remote_admits = 0
-        self._local_admits = 0
-        self._deferred_imports = 0
-        self._handoff_bytes = 0
+        # Mutated by the loop thread during admission, read by stats()
+        # callers (cluster driver, benchmarks) — _lock is created by the
+        # super().__init__ call below, before any sharing can start.
+        self._remote_admits = 0               # guarded-by: _lock
+        self._local_admits = 0                # guarded-by: _lock
+        self._deferred_imports = 0            # guarded-by: _lock
+        self._handoff_bytes = 0               # guarded-by: _lock
         super().__init__(cfg, params, scfg, policy, executor,
                          result_endpoints)
 
@@ -535,14 +551,17 @@ class PagedEngine(ContinuousEngine):
                     # retry imports it instead of re-running the remote
                     # prefill.
                     self.handoff_store.put(key, data)
-                    self._deferred_imports += 1
+                    with self._lock:
+                        self._deferred_imports += 1
                     return None
-                self._remote_admits += 1        # counted once, on success
-                self._handoff_bytes += len(data)
+                with self._lock:                # counted once, on success
+                    self._remote_admits += 1
+                    self._handoff_bytes += len(data)
                 return tok0
         tok0 = self.backend.admit(req)
         if tok0 is not None:
-            self._local_admits += 1
+            with self._lock:
+                self._local_admits += 1
         return tok0
 
     # -- decode / release ------------------------------------------------------
@@ -558,12 +577,13 @@ class PagedEngine(ContinuousEngine):
         s.update(self.backend.stats())
         s["resident_cache_bytes"] = self.cache_bytes()
         if self.handoff_store is not None:
-            s["handoffs"] = {
-                "remote_admits": self._remote_admits,
-                "local_admits": self._local_admits,
-                "deferred_imports": self._deferred_imports,
-                "bytes": self._handoff_bytes,
-            }
+            with self._lock:
+                s["handoffs"] = {
+                    "remote_admits": self._remote_admits,
+                    "local_admits": self._local_admits,
+                    "deferred_imports": self._deferred_imports,
+                    "bytes": self._handoff_bytes,
+                }
         return s
 
 

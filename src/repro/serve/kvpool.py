@@ -27,11 +27,12 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import pickle
-import threading
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.runtime.locks import make_lock
 
 SCRATCH_PAGE = 0
 
@@ -71,36 +72,46 @@ class KVBlockPool:
         self.num_pages = num_pages
         self.page_size = page_size
         self.prefix_cache = prefix_cache
+        # The engine loop allocates/evicts while router threads probe() and
+        # cluster/bench threads read stats(): one internal lock covers every
+        # mutable structure and counter.  The spill callback passed to
+        # alloc()/evict_one() runs *under* this lock and must not call back
+        # into the pool.
+        self._lock = make_lock("KVBlockPool._lock")
         # Lowest-numbered free page first: deterministic like SlotTable.
-        self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self._refs = np.zeros(num_pages, np.int64)
-        self._chain_of: Dict[int, bytes] = {}        # page -> chain key
-        self._index: Dict[bytes, int] = {}           # chain key -> hot page
-        self._cached: "OrderedDict[int, bytes]" = OrderedDict()  # LRU, ref==0
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))  # guarded-by: _lock
+        self._refs = np.zeros(num_pages, np.int64)   # guarded-by: _lock
+        self._chain_of: Dict[int, bytes] = {}        # guarded-by: _lock
+        self._index: Dict[bytes, int] = {}           # guarded-by: _lock
+        self._cached: "OrderedDict[int, bytes]" = OrderedDict()  # guarded-by: _lock
         # Stats (host-side; read by engine.stats()).
-        self.hit_pages = 0
-        self.lookup_pages = 0
-        self.faults = 0
-        self.spills = 0
+        self.hit_pages = 0          # guarded-by: _lock
+        self.lookup_pages = 0       # guarded-by: _lock
+        self.faults = 0             # guarded-by: _lock
+        self.spills = 0             # guarded-by: _lock
         # Accounting-drift counters: non-zero means a caller bug, but the
         # pool degrades (alloc -> None / unref ignored) instead of killing
         # the engine thread that hit it.
-        self.alloc_failures = 0
-        self.unref_underflows = 0
+        self.alloc_failures = 0     # guarded-by: _lock
+        self.unref_underflows = 0   # guarded-by: _lock
 
     # -- capacity ------------------------------------------------------------
     def free_count(self) -> int:
-        return len(self._free)
+        with self._lock:
+            return len(self._free)
 
     def cached_count(self) -> int:
-        return len(self._cached)
+        with self._lock:
+            return len(self._cached)
 
     def available(self) -> int:
         """Pages obtainable right now (free + evictable cached)."""
-        return len(self._free) + len(self._cached)
+        with self._lock:
+            return len(self._free) + len(self._cached)
 
     def active_count(self) -> int:
-        return int((self._refs > 0).sum())
+        with self._lock:
+            return int((self._refs > 0).sum())
 
     # -- alloc / refcounting -------------------------------------------------
     def alloc(self, n: int,
@@ -115,48 +126,51 @@ class KVBlockPool:
         upstream), the partially-taken pages are rolled back onto the free
         stack and the call degrades to None — the engine's deferred-admission
         path retries later instead of the decode thread dying."""
-        if self.available() < n:
-            return None
-        got: List[int] = []
-        while len(got) < n:
-            if self._free:
-                got.append(self._free.pop())
-                continue
-            if self.evict_one(evict_cb) is None:
-                # available() promised a page that isn't there: roll back
-                # (pop order reversed restores the original stack) and defer.
-                while got:
-                    self._free.append(got.pop())
-                self.alloc_failures += 1
+        with self._lock:
+            if len(self._free) + len(self._cached) < n:
                 return None
-        for p in got:
-            self._refs[p] = 1
-        return got
+            got: List[int] = []
+            while len(got) < n:
+                if self._free:
+                    got.append(self._free.pop())
+                    continue
+                if self._evict_locked(evict_cb) is None:
+                    # available() promised a page that isn't there: roll back
+                    # (pop order reversed restores the original stack), defer.
+                    while got:
+                        self._free.append(got.pop())
+                    self.alloc_failures += 1
+                    return None
+            for p in got:
+                self._refs[p] = 1
+            return got
 
     def ref(self, page: int) -> None:
-        if self._refs[page] == 0:
-            self._cached.pop(page, None)
-        self._refs[page] += 1
+        with self._lock:
+            if self._refs[page] == 0:
+                self._cached.pop(page, None)
+            self._refs[page] += 1
 
     def unref(self, page: int) -> None:
-        if self._refs[page] <= 0:
-            # Double-unref is an upstream bug, but the page is already
-            # free/cached — count it and carry on rather than kill the
-            # engine thread mid-decode.
-            self.unref_underflows += 1
-            return
-        self._refs[page] -= 1
-        if self._refs[page] > 0:
-            return
-        chain = self._chain_of.get(page)
-        if chain is not None and self.prefix_cache:
-            self._cached[page] = chain           # keep warm, LRU order
-            self._cached.move_to_end(page)
-        else:
-            self._forget(page)
-            self._free.append(page)
+        with self._lock:
+            if self._refs[page] <= 0:
+                # Double-unref is an upstream bug, but the page is already
+                # free/cached — count it and carry on rather than kill the
+                # engine thread mid-decode.
+                self.unref_underflows += 1
+                return
+            self._refs[page] -= 1
+            if self._refs[page] > 0:
+                return
+            chain = self._chain_of.get(page)
+            if chain is not None and self.prefix_cache:
+                self._cached[page] = chain       # keep warm, LRU order
+                self._cached.move_to_end(page)
+            else:
+                self._forget(page)
+                self._free.append(page)
 
-    def _forget(self, page: int) -> None:
+    def _forget(self, page: int) -> None:  # requires: _lock
         chain = self._chain_of.pop(page, None)
         if chain is not None and self._index.get(chain) == page:
             del self._index[chain]
@@ -164,34 +178,43 @@ class KVBlockPool:
     # -- prefix index ----------------------------------------------------------
     def lookup(self, chain: bytes) -> Optional[int]:
         """Hot hit: returns the page (caller must ref() it) or None."""
-        self.lookup_pages += 1
-        page = self._index.get(chain)
-        if page is None:
-            return None
-        self.hit_pages += 1
-        if page in self._cached:
-            self._cached.move_to_end(page)       # touched: most-recently-used
-        return page
+        with self._lock:
+            self.lookup_pages += 1
+            page = self._index.get(chain)
+            if page is None:
+                return None
+            self.hit_pages += 1
+            if page in self._cached:
+                self._cached.move_to_end(page)   # touched: most-recently-used
+            return page
 
     def probe(self, chain: bytes) -> bool:
         """Whether a chain is hot-indexed, *without* touching LRU order or
         hit counters — a read-only affinity probe for the cluster router
         (a probe that refreshed LRU recency would let routing queries keep
         pages alive that no request ever reused)."""
-        return chain in self._index
+        with self._lock:
+            return chain in self._index
 
     def register(self, chain: bytes, page: int) -> None:
         """Index a freshly-computed full prompt page.  First writer wins: if
         the chain is already indexed (two identical prompts prefilled
         concurrently), the duplicate page stays private to its slot."""
-        if not self.prefix_cache or chain in self._index:
-            return
-        self._index[chain] = page
-        self._chain_of[page] = chain
+        with self._lock:
+            if not self.prefix_cache or chain in self._index:
+                return
+            self._index[chain] = page
+            self._chain_of[page] = chain
 
-    def evict_one(self, evict_cb: Optional[Callable[[int, bytes], None]] = None
-                  ) -> Optional[Tuple[int, bytes]]:
-        """Evict the LRU cached page to the free stack, spilling first."""
+    def note_fault(self) -> None:
+        """Count a cold-tier fault-in (backends call this instead of poking
+        the counter, which would race the engine loop)."""
+        with self._lock:
+            self.faults += 1
+
+    def _evict_locked(self,
+                      evict_cb: Optional[Callable[[int, bytes], None]] = None
+                      ) -> Optional[Tuple[int, bytes]]:  # requires: _lock
         if not self._cached:
             return None
         page, chain = self._cached.popitem(last=False)
@@ -202,19 +225,29 @@ class KVBlockPool:
         self._free.append(page)
         return page, chain
 
+    def evict_one(self, evict_cb: Optional[Callable[[int, bytes], None]] = None
+                  ) -> Optional[Tuple[int, bytes]]:
+        """Evict the LRU cached page to the free stack, spilling first.
+        ``evict_cb`` runs under the pool lock: it must not re-enter the
+        pool (the paged backend's spill only reads device pages and feeds
+        the cold tier / sidecar, which are separate lock domains)."""
+        with self._lock:
+            return self._evict_locked(evict_cb)
+
     def stats(self) -> Dict[str, Any]:
-        return {
-            "pages": self.num_pages,
-            "free": self.free_count(),
-            "cached": self.cached_count(),
-            "active": self.active_count(),
-            "prefix_hit_pages": self.hit_pages,
-            "prefix_lookup_pages": self.lookup_pages,
-            "faults": self.faults,
-            "spills": self.spills,
-            "alloc_failures": self.alloc_failures,
-            "unref_underflows": self.unref_underflows,
-        }
+        with self._lock:
+            return {
+                "pages": self.num_pages,
+                "free": len(self._free),
+                "cached": len(self._cached),
+                "active": int((self._refs > 0).sum()),
+                "prefix_hit_pages": self.hit_pages,
+                "prefix_lookup_pages": self.lookup_pages,
+                "faults": self.faults,
+                "spills": self.spills,
+                "alloc_failures": self.alloc_failures,
+                "unref_underflows": self.unref_underflows,
+            }
 
 
 class ColdTier:
@@ -230,10 +263,10 @@ class ColdTier:
 
     def __init__(self, capacity_pages: int = 256):
         self.capacity = capacity_pages
-        self._store: "OrderedDict[bytes, Any]" = OrderedDict()
-        self._lock = threading.Lock()
-        self.dropped = 0        # LRU entries lost to capacity pressure
-        self.rejected = 0       # puts refused outright (capacity <= 0)
+        self._lock = make_lock("ColdTier._lock")
+        self._store: "OrderedDict[bytes, Any]" = OrderedDict()  # guarded-by: _lock
+        self.dropped = 0        # guarded-by: _lock
+        self.rejected = 0       # guarded-by: _lock
 
     def __len__(self) -> int:
         with self._lock:

@@ -17,6 +17,7 @@ import numpy as np
 from repro.config.model import (
     MIX_ATTN_LOCAL, MIX_RGLRU, MIX_RWKV6, ModelConfig)
 from repro.config.run import ServeConfig
+from repro.runtime.locks import make_lock
 from repro.serve.sampler import SamplingParams
 
 
@@ -90,29 +91,37 @@ class SlotTable:
 
     def __init__(self, width: int):
         self.width = width
-        self._req: List[Optional[Request]] = [None] * width
-        self._free: List[int] = list(range(width))
+        # Mutations come from the engine loop thread; free_count()/active()
+        # are also read by router/cluster threads collecting signals.
+        self._lock = make_lock("SlotTable._lock")
+        self._req: List[Optional[Request]] = [None] * width  # guarded-by: _lock
+        self._free: List[int] = list(range(width))           # guarded-by: _lock
         heapq.heapify(self._free)
 
     def free_count(self) -> int:
-        return len(self._free)
+        with self._lock:
+            return len(self._free)
 
     def acquire(self, req: Request) -> int:
-        slot = heapq.heappop(self._free)
-        self._req[slot] = req
+        with self._lock:
+            slot = heapq.heappop(self._free)
+            self._req[slot] = req
         req.slot = slot
         return slot
 
     def release(self, slot: int) -> None:
-        assert self._req[slot] is not None, f"slot {slot} already free"
-        self._req[slot] = None
-        heapq.heappush(self._free, slot)
+        with self._lock:
+            assert self._req[slot] is not None, f"slot {slot} already free"
+            self._req[slot] = None
+            heapq.heappush(self._free, slot)
 
     def get(self, slot: int) -> Optional[Request]:
-        return self._req[slot]
+        with self._lock:
+            return self._req[slot]
 
     def active(self) -> List[Request]:
-        return [r for r in self._req if r is not None]
+        with self._lock:
+            return [r for r in self._req if r is not None]
 
 
 def needs_exact_prefill(cfg: ModelConfig) -> bool:
@@ -141,37 +150,47 @@ class Scheduler:
         self.buckets = tuple(sorted(scfg.prefill_buckets))
         self.exact = exact_buckets
         self.capacity = scfg.max_seq_len
-        self._dq: "deque[Request]" = deque()
+        # Producers push from submit() threads while the engine loop pops;
+        # depth() feeds router signals from yet other threads.
+        self._lock = make_lock("Scheduler._lock")
+        self._dq: "deque[Request]" = deque()    # guarded-by: _lock
 
     def push(self, req: Request) -> None:
-        if len(self._dq) >= self.max_queue:
-            raise QueueFull(
-                f"admission queue full ({self.max_queue}); retry after step()")
-        self._dq.append(req)
+        with self._lock:
+            if len(self._dq) >= self.max_queue:
+                raise QueueFull(
+                    f"admission queue full ({self.max_queue}); "
+                    "retry after step()")
+            self._dq.append(req)
 
     def push_front(self, req: Request) -> None:
         """Requeue at the head (admission deferred on resource shortage);
         deliberately exempt from the max_queue bound — the request was
         already admitted to the queue once."""
-        self._dq.appendleft(req)
+        with self._lock:
+            self._dq.appendleft(req)
 
     def pop(self) -> Request:
-        return self._dq.popleft()
+        with self._lock:
+            return self._dq.popleft()
 
     def remove(self, req: Request) -> bool:
         """Withdraw a queued request (cluster preemption / pull-back).
         Returns False if the request was not in the queue."""
-        try:
-            self._dq.remove(req)
-            return True
-        except ValueError:
-            return False
+        with self._lock:
+            try:
+                self._dq.remove(req)
+                return True
+            except ValueError:
+                return False
 
     def depth(self) -> int:
-        return len(self._dq)
+        with self._lock:
+            return len(self._dq)
 
     def empty(self) -> bool:
-        return not self._dq
+        with self._lock:
+            return not self._dq
 
     def bucket_for(self, length: int) -> int:
         """Bucketed prefill length, clamped to the decode-state capacity.

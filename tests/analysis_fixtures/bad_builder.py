@@ -1,0 +1,8 @@
+"""Seeded IMPURE_BUILDER violation: trace-time wall clock in a builder."""
+import time
+
+
+def make_decode_program(scale):
+    def program(x):
+        return x * scale + time.time()   # seeded: frozen at trace time
+    return program

@@ -1,0 +1,15 @@
+"""Seeded LOCK_GUARD violation: a stat bumped outside its guarding lock."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.hits = 0       # guarded-by: _lock
+
+    def ok(self):
+        with self._lock:
+            self.hits += 1
+
+    def racy(self):
+        self.hits += 1      # seeded violation: no lock held

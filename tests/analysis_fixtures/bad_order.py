@@ -1,0 +1,18 @@
+"""Seeded LOCK_ORDER violation: the same two locks nested both ways."""
+import threading
+
+
+class Tangle:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def forward(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def backward(self):
+        with self._b:
+            with self._a:       # seeded violation: reverse of forward()
+                pass

@@ -1,0 +1,5 @@
+"""Seeded HOST_SYNC violation: a hot root syncs to host every step."""
+
+
+def decode_step(logits):
+    return logits.item()    # seeded violation: per-step device->host sync

@@ -1,0 +1,33 @@
+"""Clean fixture: every analyzer pass must report nothing here."""
+import threading
+
+
+class Guarded:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._aux = threading.Lock()
+        self.count = 0      # guarded-by: _lock
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+    def nested(self):
+        # consistent order everywhere: _lock before _aux
+        with self._lock:
+            with self._aux:
+                return self.count
+
+    def peek(self):  # requires: _lock
+        return self.count
+
+
+def decode_step(tokens):
+    # hot root by name, but it stays on the host-free path
+    return [t + 1 for t in tokens]
+
+
+def make_program(scale):
+    def program(x):
+        return x * scale
+    return program

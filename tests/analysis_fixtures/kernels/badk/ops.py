@@ -1,0 +1,5 @@
+"""Seeded KERNEL_GUARD violation: kernel ops module with no supported()."""
+
+
+def run(x):
+    return x

@@ -1,0 +1,9 @@
+"""Clean kernel fixture: supported() gate with a divisibility check."""
+
+
+def supported(seq_len, block):
+    return seq_len % block == 0
+
+
+def run(x):
+    return x

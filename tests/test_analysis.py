@@ -1,0 +1,214 @@
+"""Analyzer + lock-sanitizer tests.
+
+Each seeded fixture under ``tests/analysis_fixtures/`` trips exactly its
+own pass and nothing else; the clean fixtures trip nothing; the CLI gate
+exits 0 on the real tree and non-zero on the seeded violations.  The
+runtime ``OrderedLock`` half is exercised on test-local graphs so nothing
+here pollutes the process-global graph the threaded serve tests check.
+"""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.analysis import filter_allowed, run_passes
+from repro.analysis.common import Allowlist, AllowlistError, Finding
+from repro.runtime.locks import (
+    LockOrderError, LockOrderGraph, OrderedLock, make_lock, make_rlock)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+FIXTURES = os.path.join(HERE, "analysis_fixtures")
+
+
+def fixture(*parts):
+    return os.path.join(FIXTURES, *parts)
+
+
+def keys(findings):
+    return [(f.rule, f.qualname) for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# Static passes against the seeded fixtures
+# ---------------------------------------------------------------------------
+
+def test_clean_fixture_has_no_findings():
+    assert run_passes(fixture("clean.py")) == []
+
+
+def test_clean_kernel_ops_passes_kernel_guard():
+    assert run_passes(fixture("kernels", "goodk", "ops.py")) == []
+
+
+def test_lock_guard_reports_exactly_the_seeded_violation():
+    found = run_passes(fixture("bad_guard.py"))
+    assert keys(found) == [("LOCK_GUARD", "Counter.racy")]
+    assert "self.hits" in found[0].message
+
+
+def test_lock_order_reports_the_seeded_cycle():
+    found = run_passes(fixture("bad_order.py"))
+    assert len(found) == 1
+    assert found[0].rule == "LOCK_ORDER"
+    assert "cycle" in found[0].message
+    assert {"Tangle._a", "Tangle._b"} <= set(
+        found[0].qualname.replace("->", " ").split())
+
+
+def test_host_sync_reports_the_seeded_violation():
+    found = run_passes(fixture("bad_sync.py"))
+    assert keys(found) == [("HOST_SYNC", "decode_step")]
+    assert ".item()" in found[0].message
+
+
+def test_impure_builder_reports_the_seeded_violation():
+    found = run_passes(fixture("bad_builder.py"))
+    assert keys(found) == [("IMPURE_BUILDER", "make_decode_program.program")]
+    assert "time.time()" in found[0].message
+
+
+def test_kernel_guard_reports_missing_supported_gate():
+    found = run_passes(fixture("kernels", "badk", "ops.py"))
+    assert keys(found) == [("KERNEL_GUARD", "<module>")]
+    assert "supported()" in found[0].message
+
+
+def test_fixture_sweep_finds_every_seeded_rule_once():
+    found = run_passes(FIXTURES)
+    rules = sorted(f.rule for f in found)
+    assert rules == sorted(["LOCK_GUARD", "LOCK_ORDER", "HOST_SYNC",
+                            "IMPURE_BUILDER", "KERNEL_GUARD"])
+
+
+# ---------------------------------------------------------------------------
+# Allowlist semantics
+# ---------------------------------------------------------------------------
+
+def test_allowlist_requires_a_justification(tmp_path):
+    p = tmp_path / "allow.txt"
+    p.write_text("HOST_SYNC src/x.py::f\n")
+    with pytest.raises(AllowlistError):
+        Allowlist.load(str(p))
+
+
+def test_allowlist_covers_by_rule_file_and_qualname(tmp_path):
+    p = tmp_path / "allow.txt"
+    p.write_text("HOST_SYNC src/x.py::f  # audited\n")
+    al = Allowlist.load(str(p))
+    hit = Finding("HOST_SYNC", "src/x.py", 10, "f", "m")
+    miss = Finding("HOST_SYNC", "src/x.py", 10, "g", "m")
+    assert al.covers(hit) and not al.covers(miss)
+    assert filter_allowed([hit, miss], al) == [miss]
+    assert al.unused([miss]) == ["HOST_SYNC src/x.py::f"]
+
+
+# ---------------------------------------------------------------------------
+# CLI gate
+# ---------------------------------------------------------------------------
+
+def _cli(*args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_gate_is_clean_on_the_real_tree():
+    proc = _cli("--check", "src")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_gate_fails_on_each_seeded_fixture():
+    for name in ("bad_guard.py", "bad_order.py", "bad_sync.py",
+                 "bad_builder.py", os.path.join("kernels", "badk", "ops.py")):
+        proc = _cli("--check", fixture(name), "--allowlist", "none")
+        assert proc.returncode == 1, (name, proc.stdout, proc.stderr)
+
+
+# ---------------------------------------------------------------------------
+# Runtime sanitizer (test-local graphs; the global graph stays untouched)
+# ---------------------------------------------------------------------------
+
+def test_ordered_lock_raises_on_reversed_order():
+    g = LockOrderGraph()
+    a = OrderedLock("A", graph=g)
+    b = OrderedLock("B", graph=g)
+    with a:
+        with b:
+            pass
+    with pytest.raises(LockOrderError):
+        with b:
+            with a:
+                pass
+
+
+def test_ordered_lock_detects_cross_thread_conflict():
+    g = LockOrderGraph()
+    a = OrderedLock("A", graph=g)
+    b = OrderedLock("B", graph=g)
+
+    def forward():
+        with a:
+            with b:
+                pass
+
+    t = threading.Thread(target=forward)
+    t.start()
+    t.join()
+    # the conflicting order is reported even though no deadlock happened
+    with pytest.raises(LockOrderError):
+        with b:
+            with a:
+                pass
+
+
+def test_rlock_reentry_records_no_edges():
+    g = LockOrderGraph()
+    r = OrderedLock("R", reentrant=True, graph=g)
+    with r:
+        with r:
+            pass
+    assert g.edges() == {}
+    g.check()
+
+
+def test_same_domain_two_instances_raises():
+    g = LockOrderGraph()
+    l1 = OrderedLock("D", graph=g)
+    l2 = OrderedLock("D", graph=g)
+    with pytest.raises(LockOrderError):
+        with l1:
+            with l2:
+                pass
+
+
+def test_condition_wait_notify_over_ordered_lock():
+    g = LockOrderGraph()
+    cv = threading.Condition(OrderedLock("CV", graph=g))
+    ready = []
+
+    def producer():
+        time.sleep(0.05)
+        with cv:
+            ready.append(1)
+            cv.notify()
+
+    t = threading.Thread(target=producer)
+    t.start()
+    with cv:
+        assert cv.wait_for(lambda: ready, timeout=5.0)
+    t.join()
+    g.check()
+
+
+def test_factories_respect_env_flag(monkeypatch):
+    monkeypatch.setenv("REPRO_LOCK_SANITIZER", "1")
+    assert isinstance(make_lock("X._l"), OrderedLock)
+    assert isinstance(make_rlock("X._r"), OrderedLock)
+    monkeypatch.delenv("REPRO_LOCK_SANITIZER")
+    assert not isinstance(make_lock("X._l"), OrderedLock)
+    assert not isinstance(make_rlock("X._r"), OrderedLock)

@@ -176,6 +176,49 @@ def test_executor_drain_counts_dropped_tasks():
     ex.shutdown(drain=False)
 
 
+def test_executor_close_is_idempotent_and_rejects_late_submits():
+    """shutdown() twice is a no-op; drain() after close returns promptly;
+    a submit() after close fails the task out instead of queueing work no
+    worker will ever run (regression: callers waiting on task.done hung)."""
+    ex = BackgroundExecutor(num_threads=1, max_inflight=4)
+    ok = ex.submit("noop", lambda: 1)
+    assert ex.drain(timeout=5.0) is True
+    ex.shutdown()
+    ex.shutdown()                               # second close: no-op, no hang
+    assert ex.drain(timeout=1.0) is True        # nothing left in flight
+    late = ex.submit("late", lambda: 2)
+    assert late.done.is_set()
+    assert "rejected" in late.record.error
+    assert ok.record.error is None
+    assert ex.stats()["dropped"] >= 1
+
+
+def test_executor_shutdown_without_drain_cancels_queued_tasks():
+    """shutdown(drain=False) must fail out queued-but-unstarted tasks so a
+    later drain() (or task.done.wait()) cannot hang on orphaned work."""
+    ex = BackgroundExecutor(num_threads=1, max_inflight=4)
+    gate = threading.Event()
+    running = threading.Event()
+
+    def blocker():
+        running.set()
+        gate.wait(5.0)
+        return "done"
+
+    first = ex.submit("blocker", blocker)
+    assert running.wait(5.0)
+    queued = [ex.submit(f"q{i}", lambda: None) for i in range(2)]
+    releaser = threading.Thread(target=lambda: (time.sleep(0.2), gate.set()))
+    releaser.start()
+    ex.shutdown(drain=False)
+    releaser.join()
+    for task in queued:
+        assert task.done.wait(5.0)
+        assert "cancelled" in task.record.error
+    assert first.done.wait(5.0)
+    assert ex.drain(timeout=5.0) is True
+
+
 # ----------------------------------------------------------------------------
 # host memory pool (G3)
 # ----------------------------------------------------------------------------

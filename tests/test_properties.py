@@ -114,7 +114,7 @@ def test_sharded_store_roundtrip_and_ownership(keys, n_endpoints):
     for k, v in expected.items():
         assert store.get(k) == v
     # non-overlap: each key lives on exactly its owner
-    for i, k in enumerate(set(keys)):
+    for k in set(keys):
         owners = [j for j, e in enumerate(eps) if k in e]
         assert owners == [store.owner(k)]
 

@@ -13,8 +13,18 @@ from repro.serve import (
     make_engine)
 from repro.serve.backends import (
     PagedKVBackend, SnapshotBackend, SnapshotPool, make_backend, snap_key)
+from repro.runtime.locks import order_graph
 from repro.serve.scheduler import hit_stop, normalize_stop
 from repro.train.steps import init_train_state
+
+
+@pytest.fixture(autouse=True)
+def lock_sanitizer(monkeypatch):
+    """Run every backend test with the lock-order sanitizer on, and assert
+    the accumulated acquisition graph stayed acyclic afterwards."""
+    monkeypatch.setenv("REPRO_LOCK_SANITIZER", "1")
+    yield
+    order_graph().check()
 
 
 @pytest.fixture(scope="module")

@@ -14,7 +14,17 @@ from repro.serve import (
     ContinuousEngine, DisaggregatedEngine, FixedBatchEngine, PagedEngine,
     QueueFull, ServeCluster, TenantSpec, TokenBucket, make_engine,
     resolve_engine_mode)
+from repro.runtime.locks import order_graph
 from repro.train.steps import init_train_state
+
+
+@pytest.fixture(autouse=True)
+def lock_sanitizer(monkeypatch):
+    """Run every cluster test with the lock-order sanitizer on, and assert
+    the accumulated acquisition graph stayed acyclic afterwards."""
+    monkeypatch.setenv("REPRO_LOCK_SANITIZER", "1")
+    yield
+    order_graph().check()
 
 
 @pytest.fixture(scope="module")
