@@ -6,10 +6,16 @@ the device, and jitted program builders must stay deterministic.
 * **HOST_SYNC** — ``.item()``, ``np.asarray(...)``, ``np.array(...)``,
   ``jax.device_get(...)``, ``.block_until_ready()`` inside any function
   reachable from a hot root (the engine step loops and backend admit /
-  decode / handoff paths).  Each of these forces a device->host transfer
-  and stalls the dispatch pipeline; the handful that are *by design*
-  (e.g. the one token sync per decode step) live in the allowlist with a
-  justification.
+  decode / handoff / spill / fault paths).  Each of these forces a
+  device->host transfer and stalls the dispatch pipeline; the handful that
+  are *by design* (e.g. the one token sync per decode step) live in the
+  allowlist with a justification.
+* **HOST_SYNC_LOOP** — the same sync calls when they sit lexically inside a
+  loop or comprehension in a hot-reachable function.  A sync *per
+  iteration* (e.g. one ``jax.device_get`` per prompt page in a handoff
+  export) multiplies the stall by the trip count; it gets its own rule so
+  an allowlisted single sync in a function can never mask a reintroduced
+  per-item sync loop in the same function.
 * **IMPURE_BUILDER** — wall-clock / Python RNG (``time.*``, ``random.*``,
   ``np.random.*``, ``datetime.*``) inside the closures that ``make_*``
   program builders return.  Those closures are traced by ``jax.jit``:
@@ -35,16 +41,23 @@ from repro.analysis.common import (Finding, SourceFile, attr_chain,
                                    func_defs, self_field)
 
 HOST_SYNC = "HOST_SYNC"
+HOST_SYNC_LOOP = "HOST_SYNC_LOOP"
 IMPURE_BUILDER = "IMPURE_BUILDER"
 KERNEL_GUARD = "KERNEL_GUARD"
 
 # Functions with these names are hot roots wherever they appear: the engine
-# step loops, admission, and the backend fast paths they dispatch into.
+# step loops, admission, the backend fast paths they dispatch into, and the
+# tiered-memory movers (spill/fault run between decode steps on the same
+# engine loop thread).
 HOT_ROOTS = {
     "step", "_decode_once", "_decode_device", "decode_step",
     "_admit", "_admit_one", "admit", "_admit_cold", "_admit_resume",
     "import_handoff", "export_handoff", "prefill_to_handoff",
+    "_spill", "_fault_in",
 }
+
+_LOOP_NODES = (ast.For, ast.AsyncFor, ast.While, ast.ListComp, ast.SetComp,
+               ast.DictComp, ast.GeneratorExp)
 
 _SYNC_ATTRS = {"item", "block_until_ready"}
 _NP_SYNC = {"asarray", "array", "ascontiguousarray", "copyto"}
@@ -169,13 +182,25 @@ def _check_host_syncs(sources: List[SourceFile]) -> List[Finding]:
     findings: List[Finding] = []
     for key, roots in sorted(tag.items()):
         info = funcs[key]
+        # Nodes lexically inside a loop/comprehension (excluding nested
+        # defs, whose bodies get their own walk if they are hot-reachable):
+        # a sync there stalls once per iteration and is reported under the
+        # stricter HOST_SYNC_LOOP rule.
+        in_loop: Set[int] = set()
+        for sub in ast.walk(info.node):
+            if isinstance(sub, _LOOP_NODES):
+                for inner in ast.walk(sub):
+                    in_loop.add(id(inner))
         for node in ast.walk(info.node):
             if isinstance(node, ast.Call):
                 what = _is_host_sync(node)
                 if what:
+                    looped = id(node) in in_loop
                     findings.append(Finding(
-                        HOST_SYNC, info.src.path, node.lineno, info.qualname,
-                        f"host sync {what} on hot path "
+                        HOST_SYNC_LOOP if looped else HOST_SYNC,
+                        info.src.path, node.lineno, info.qualname,
+                        f"host sync {what} "
+                        f"{'inside a loop ' if looped else ''}on hot path "
                         f"(reachable from: {', '.join(sorted(roots))})"))
     return findings
 

@@ -113,6 +113,11 @@ class ServeConfig:
     num_pages: int = 0               # pool size; 0 -> full residency for
     #                                  every slot (max_batch * pages_per_seq)
     prefix_cache: bool = True        # hash-keyed prefix page sharing (CoW)
+    kv_quant: str = "none"           # "none" | "int8": quantized KV pages
+    #                                  (int8 values + per-entry f32 scales;
+    #                                  ~3.5x pages per byte, ~3.5x smaller
+    #                                  handoff blobs).  Paged backend only —
+    #                                  snapshot archs keep f32 state.
     cold_pages: int = 256            # host-tier spill capacity (pages for
     #                                  the paged backend, snapshots for the
     #                                  snapshot backend); 0 disables the

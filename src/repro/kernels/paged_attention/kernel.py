@@ -114,3 +114,107 @@ def paged_attention_bjgn(
         interpret=interpret,
     )(table.reshape(-1).astype(jnp.int32), lengths.astype(jnp.int32),
       q, kp, vp)
+
+
+def _paged_quant_kernel(table_ref, len_ref, q_ref, k_ref, v_ref,
+                        ks_ref, vs_ref, o_ref,
+                        m_scr, l_scr, acc_scr, *, page: int, n_pages: int):
+    """Fused dequant-attend: K/V blocks arrive int8 and are scaled to f32
+    *inside* the kernel (one multiply per block, already in VMEM), so the
+    attention never materializes an f32 page anywhere — the whole point of
+    shipping quantized pages."""
+    b = pl.program_id(0)
+    m = pl.program_id(2)
+
+    @pl.when(m == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    t0 = m * page
+
+    @pl.when(t0 < length)                 # pages past the row's length: dead
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, N), pre-scaled
+        ks = ks_ref[0, :, 0]                         # (page,) f32
+        vs = vs_ref[0, :, 0]
+        k = k_ref[0, :, 0].astype(jnp.float32) * ks[:, None]   # (page, N)
+        v = v_ref[0, :, 0].astype(jnp.float32) * vs[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G,page)
+        tpos = t0 + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(tpos < length, s, NEG_INF)     # partial tail page
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    @pl.when(m == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_quant_bjgn(
+    q: jax.Array,          # (B, J, G, N)
+    kp: jax.Array,         # (P, page, J, N) int8
+    vp: jax.Array,         # (P, page, J, N) int8
+    ksc: jax.Array,        # (P, page, J) f32 per-(entry, head) scales
+    vsc: jax.Array,        # (P, page, J) f32
+    table: jax.Array,      # (B, M) int32
+    lengths: jax.Array,    # (B,) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:            # (B, J, G, N)
+    """Quantized-page variant of ``paged_attention_bjgn``: same grid, same
+    block-table prefetch, plus two scale operands riding the same kv index
+    map (a scale block is the (page,) vector for the physical page's head
+    slice)."""
+    B, J, G, N = q.shape
+    page = kp.shape[1]
+    M = table.shape[1]
+    kernel = functools.partial(_paged_quant_kernel, page=page, n_pages=M)
+
+    def q_map(b, j, m, table_ref, len_ref):
+        return (b, j, 0, 0)
+
+    def kv_map(b, j, m, table_ref, len_ref):
+        return (table_ref[b * M + m], 0, j, 0)
+
+    def sc_map(b, j, m, table_ref, len_ref):
+        return (table_ref[b * M + m], 0, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, J, M),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, N), q_map),
+            pl.BlockSpec((1, page, 1, N), kv_map),
+            pl.BlockSpec((1, page, 1, N), kv_map),
+            pl.BlockSpec((1, page, 1), sc_map),
+            pl.BlockSpec((1, page, 1), sc_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, N), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, N), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, J, G, N), q.dtype),
+        interpret=interpret,
+    )(table.reshape(-1).astype(jnp.int32), lengths.astype(jnp.int32),
+      q, kp, vp, ksc.astype(jnp.float32), vsc.astype(jnp.float32))

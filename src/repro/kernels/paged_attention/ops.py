@@ -5,8 +5,10 @@ import functools
 
 import jax
 
-from repro.kernels.paged_attention.kernel import paged_attention_bjgn
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_bjgn, paged_attention_quant_bjgn)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_quant_ref, paged_attention_ref)
 
 
 def _interpret() -> bool:
@@ -36,4 +38,16 @@ def paged_attention(q, kp, vp, table, lengths, *, cap: float = 0.0):
                                 interpret=_interpret())
 
 
-__all__ = ["paged_attention", "paged_attention_ref", "supported"]
+@functools.partial(jax.jit, static_argnames=("cap",))
+def paged_attention_quant(q, kp, vp, ksc, vsc, table, lengths, *,
+                          cap: float = 0.0):
+    """Quantized-pool variant: int8 kp/vp + per-(entry, head) f32 ksc/vsc.
+    Dequantizes inside the kernel; same ``supported`` gate as f32 (the pool
+    layouts match, only the element type differs)."""
+    del cap  # kernel path requires cap == 0 (see supported())
+    return paged_attention_quant_bjgn(q, kp, vp, ksc, vsc, table, lengths,
+                                      interpret=_interpret())
+
+
+__all__ = ["paged_attention", "paged_attention_quant",
+           "paged_attention_quant_ref", "paged_attention_ref", "supported"]

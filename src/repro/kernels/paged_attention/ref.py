@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import attend
+from repro.models.attention import attend, kv_dequantize
 
 
 def paged_attention_ref(
@@ -40,4 +40,33 @@ def paged_attention_ref(
     k_pos = jnp.where(t < lengths[:, None], t, -1)  # -1 = empty, like dense
     q_pos = (lengths[:, None] - 1).astype(jnp.int32)
     out = attend(q[:, None], kg, vg, q_pos, k_pos, causal=True, cap=cap)
+    return out[:, 0]
+
+
+def paged_attention_quant_ref(
+    q: jax.Array,          # (B, J, G, N)
+    kp: jax.Array,         # (P, page, J, N) int8
+    vp: jax.Array,         # (P, page, J, N) int8
+    ksc: jax.Array,        # (P, page, J) f32
+    vsc: jax.Array,        # (P, page, J) f32
+    table: jax.Array,      # (B, M) int32
+    lengths: jax.Array,    # (B,) int32
+    *,
+    cap: float = 0.0,
+) -> jax.Array:            # (B, J, G, N)
+    """Quantized-pool oracle: gather int8 pages + scales through the block
+    table, dequantize to f32, defer to ``attend`` — what the fused kernel
+    must match without ever building these f32 views."""
+    B, M = table.shape
+    page = kp.shape[1]
+    T = M * page
+    kg = kv_dequantize(kp[table].reshape(B, T, *kp.shape[2:]),
+                       ksc[table].reshape(B, T, *ksc.shape[2:]))
+    vg = kv_dequantize(vp[table].reshape(B, T, *vp.shape[2:]),
+                       vsc[table].reshape(B, T, *vsc.shape[2:]))
+    t = jnp.arange(T, dtype=jnp.int32)[None, :]
+    k_pos = jnp.where(t < lengths[:, None], t, -1)
+    q_pos = (lengths[:, None] - 1).astype(jnp.int32)
+    out = attend(q[:, None], kg.astype(q.dtype), vg.astype(q.dtype),
+                 q_pos, k_pos, causal=True, cap=cap)
     return out[:, 0]

@@ -46,6 +46,9 @@ def main() -> None:
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV pool pages (0 -> full residency per slot)")
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--kv-quant", default="none", choices=("none", "int8"),
+                    help="paged KV page format: int8 stores pages quantized "
+                         "(~3.5x pages per byte; paged-backend archs only)")
     ap.add_argument("--route", default="auto",
                     choices=("auto", "remote", "local"),
                     help="prefill routing: cost model per request (auto) "
@@ -61,6 +64,7 @@ def main() -> None:
                        temperature=args.temperature, seed=args.seed,
                        page_size=args.page_size, num_pages=args.num_pages,
                        prefix_cache=not args.no_prefix_cache,
+                       kv_quant=args.kv_quant,
                        disagg_route=args.route,
                        engine_mode=mode or EngineMode.CONTINUOUS.value,
                        num_replicas=args.replicas)

@@ -243,13 +243,57 @@ def cache_write(cache: dict, k: jax.Array, v: jax.Array, positions: jax.Array) -
 # host-side allocator, physical page 0 is its reserved scratch page)
 # ----------------------------------------------------------------------------
 
+KV_QUANT_MODES = ("none", "int8")
+# Guards jnp.round against all-zero entries (fresh pages, padded rows): the
+# dequantized value is exactly 0 either way, so the floor only avoids 0/0.
+_KV_SCALE_FLOOR = 1e-8
+
+
+def kv_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-(entry, head) int8 quantization over the head dim.
+
+    ``x (..., N) -> (int8 values (..., N), f32 scales (...))`` with
+    ``scale = max|x| / 127``; dequant is ``values * scale`` (see
+    ``kv_dequantize``).  One scale per cache entry per KV head keeps the
+    error bounded by the entry's own dynamic range — a per-page scale would
+    let one outlier token flatten its whole page."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax / 127.0, _KV_SCALE_FLOOR)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of ``kv_quantize``: ``(..., N) int8 x (...) f32 -> (..., N)``
+    f32."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                     dtype) -> dict:
+                     dtype, kv_quant: str = "none") -> dict:
     """Physical K/V page pool shared by every slot (one per layer).  There is
     no per-entry ``pos`` array: validity is positional — entry ``t`` of a
     row's logical view is live iff ``t < length`` — because pages are written
-    densely from position 0 and never ring-wrap."""
+    densely from position 0 and never ring-wrap.
+
+    ``kv_quant="int8"`` stores pages as int8 with per-(entry, head) f32
+    scales in sibling ``ksc``/``vsc`` leaves (shape ``(P, page, J)``), so a
+    page costs ``J*(N + 4)`` bytes per entry instead of ``4*J*N`` — ~3.5x
+    more pages per byte at N=32.  The scale leaves ride the same generic
+    page movers (``read_page``/``write_page``) as the values, so spill,
+    fault-in and handoff carry them automatically."""
+    if kv_quant not in KV_QUANT_MODES:
+        raise ValueError(f"kv_quant must be one of {KV_QUANT_MODES}, "
+                         f"got {kv_quant!r}")
     j, n = cfg.num_kv_heads, cfg.head_dim
+    if kv_quant == "int8":
+        return {
+            "kp": jnp.zeros((num_pages, page_size, j, n), jnp.int8),
+            "vp": jnp.zeros((num_pages, page_size, j, n), jnp.int8),
+            "ksc": jnp.zeros((num_pages, page_size, j), jnp.float32),
+            "vsc": jnp.zeros((num_pages, page_size, j), jnp.float32),
+        }
     return {
         "kp": jnp.zeros((num_pages, page_size, j, n), dtype),
         "vp": jnp.zeros((num_pages, page_size, j, n), dtype),
@@ -272,6 +316,18 @@ def paged_cache_write(cache: dict, k: jax.Array, v: jax.Array,
     logical = jnp.minimum(pos // page, M - 1)               # clamp dead rows
     phys = table[rows, logical]                             # (B,)
     off = pos % page
+    if "ksc" in cache:
+        # Quantize-on-write: the new token's K/V rows land as int8 values
+        # plus their per-(row, head) scales, so decode appends cost the same
+        # bytes as prefilled pages and attention dequantizes uniformly.
+        kq, ks = kv_quantize(k[:, 0])
+        vq, vs = kv_quantize(v[:, 0])
+        return {
+            "kp": cache["kp"].at[phys, off].set(kq),
+            "vp": cache["vp"].at[phys, off].set(vq),
+            "ksc": cache["ksc"].at[phys, off].set(ks),
+            "vsc": cache["vsc"].at[phys, off].set(vs),
+        }
     return {
         "kp": cache["kp"].at[phys, off].set(k[:, 0].astype(cache["kp"].dtype)),
         "vp": cache["vp"].at[phys, off].set(v[:, 0].astype(cache["vp"].dtype)),
@@ -284,12 +340,19 @@ def paged_attend(q: jax.Array, cache: dict, positions: jax.Array,
     """Decode attention over the page pool.  q (B, 1, J, G, N) pre-scaled.
 
     Kernel path (TPU): the Pallas kernel DMAs K/V page-by-page through the
-    block table.  Oracle path: gather the logical view and reuse ``attend``
-    — bit-identical to the dense-cache decode (same shapes, same mask)."""
+    block table — the quantized variant dequantizes inside the kernel, so
+    f32 pages are never materialized.  Oracle path: gather the logical view
+    (dequantizing if the pool carries scale leaves) and reuse ``attend`` —
+    bit-identical to the dense-cache decode for f32 pools."""
     lengths = positions[:, 0] + 1                           # just wrote at pos
+    quant = "ksc" in cache
     if use_kernel:
         from repro.kernels.paged_attention import ops as pa_ops
         if pa_ops.supported(q[:, 0], cache["kp"], cap=cap):
+            if quant:
+                return pa_ops.paged_attention_quant(
+                    q[:, 0], cache["kp"], cache["vp"],
+                    cache["ksc"], cache["vsc"], table, lengths)[:, None]
             return pa_ops.paged_attention(
                 q[:, 0], cache["kp"], cache["vp"], table, lengths)[:, None]
     B, M = table.shape
@@ -297,6 +360,9 @@ def paged_attend(q: jax.Array, cache: dict, positions: jax.Array,
     T = M * page
     kg = cache["kp"][table].reshape(B, T, *cache["kp"].shape[2:])
     vg = cache["vp"][table].reshape(B, T, *cache["vp"].shape[2:])
+    if quant:
+        kg = kv_dequantize(kg, cache["ksc"][table].reshape(B, T, -1))
+        vg = kv_dequantize(vg, cache["vsc"][table].reshape(B, T, -1))
     t = jnp.arange(T, dtype=jnp.int32)[None, :]
     k_pos = jnp.where(t < lengths[:, None], t, -1)
     return attend(q, kg, vg, positions, k_pos, causal=True, cap=cap)

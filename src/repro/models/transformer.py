@@ -208,10 +208,14 @@ def supports_paging(cfg: ModelConfig) -> bool:
 
 
 def init_paged_decode_state(cfg: ModelConfig, num_pages: int,
-                            page_size: int) -> Dict[str, Any]:
+                            page_size: int,
+                            kv_quant: str = "none") -> Dict[str, Any]:
     """Like ``init_decode_state`` but attention caches are shared physical
     page pools (no batch axis): slot residency is whatever the block tables
-    map, so memory scales with live tokens instead of slots x max_seq_len."""
+    map, so memory scales with live tokens instead of slots x max_seq_len.
+    ``kv_quant="int8"`` stores pages quantized (int8 values + per-entry f32
+    scale leaves ``ksc``/``vsc`` riding the same tree, so spill/fault/handoff
+    move them for free)."""
     if not supports_paging(cfg):
         raise ValueError(f"{cfg.arch_id}: paging needs all-global-attention "
                          "decoder-only (recurrent/SWA archs keep the dense "
@@ -222,7 +226,7 @@ def init_paged_decode_state(cfg: ModelConfig, num_pages: int,
 
     def pool(lead=()):
         one = {"cache": attn_mod.init_paged_cache(cfg, num_pages, page_size,
-                                                  dtype)}
+                                                  dtype, kv_quant=kv_quant)}
         if not lead:
             return one
         return jax.tree.map(
@@ -248,6 +252,18 @@ def read_page(pstate: Dict[str, Any], page) -> Dict[str, Any]:
             "tail": jax.tree.map(take(0), pstate["tail"])}
 
 
+def read_pages(pstate: Dict[str, Any], pages) -> Dict[str, Any]:
+    """Batched :func:`read_page`: gather ``pages`` (an int32 vector) from
+    every pool in one op, with the page axis moved to the front of every
+    leaf — element ``i`` of the result tree equals ``read_page(pstate,
+    pages[i])``.  Lets the handoff exporter move all of a request's prompt
+    pages to the host in a single transfer instead of one sync per page."""
+    def take(axis):
+        return lambda a: jnp.moveaxis(jnp.take(a, pages, axis=axis), axis, 0)
+    return {"slots": jax.tree.map(take(1), pstate["slots"]),
+            "tail": jax.tree.map(take(0), pstate["tail"])}
+
+
 def write_page(pstate: Dict[str, Any], page, blob: Dict[str, Any]
                ) -> Dict[str, Any]:
     """Fault a spilled page's content back into every layer's pool."""
@@ -266,13 +282,19 @@ def load_prefix_pages(solo: Dict[str, Any], pstate: Dict[str, Any],
     """Seed a fresh batch-1 dense decode state with a reused prefix: gather
     the row's pages from every pool into the solo cache's first ``capacity``
     entries and mark ``[0, hit_len)`` valid.  Unassigned logical pages point
-    at the scratch page, so the gathered garbage is masked off by ``pos``."""
+    at the scratch page, so the gathered garbage is masked off by ``pos``.
+    Quantized pools dequantize on the way out (the dense solo cache is the
+    model dtype; requantization on scatter-back is the only lossy step)."""
+    from repro.models import attention as attn_mod
+
     def seed(pool_axis):
-        def f(dense_leaf, pool_leaf):
+        def f(dense_leaf, pool_cache, key, skey):
             # dense (..., 1, C, J, N) <- pool (..., P, page, J, N)[table_row]
-            gathered = jnp.take(pool_leaf, table_row, axis=pool_axis)
-            new_shape = dense_leaf.shape
-            return gathered.reshape(new_shape).astype(dense_leaf.dtype)
+            gathered = jnp.take(pool_cache[key], table_row, axis=pool_axis)
+            if skey in pool_cache:
+                scales = jnp.take(pool_cache[skey], table_row, axis=pool_axis)
+                gathered = attn_mod.kv_dequantize(gathered, scales)
+            return gathered.reshape(dense_leaf.shape).astype(dense_leaf.dtype)
         return f
 
     def fix_pos(cache_state):
@@ -287,17 +309,17 @@ def load_prefix_pages(solo: Dict[str, Any], pstate: Dict[str, Any],
     out["slots"] = {
         i: fix_pos({"cache": {
             "k": seed(1)(solo["slots"][i]["cache"]["k"],
-                         pstate["slots"][i]["cache"]["kp"]),
+                         pstate["slots"][i]["cache"], "kp", "ksc"),
             "v": seed(1)(solo["slots"][i]["cache"]["v"],
-                         pstate["slots"][i]["cache"]["vp"]),
+                         pstate["slots"][i]["cache"], "vp", "vsc"),
             "pos": solo["slots"][i]["cache"]["pos"]}})
         for i in solo["slots"]}
     out["tail"] = {
         i: fix_pos({"cache": {
             "k": seed(0)(solo["tail"][i]["cache"]["k"],
-                         pstate["tail"][i]["cache"]["kp"]),
+                         pstate["tail"][i]["cache"], "kp", "ksc"),
             "v": seed(0)(solo["tail"][i]["cache"]["v"],
-                         pstate["tail"][i]["cache"]["vp"]),
+                         pstate["tail"][i]["cache"], "vp", "vsc"),
             "pos": solo["tail"][i]["cache"]["pos"]}})
         for i in solo["tail"]}
     out["pos"] = jnp.asarray(hit_len, jnp.int32)
@@ -309,33 +331,47 @@ def scatter_solo_pages(pstate: Dict[str, Any], solo: Dict[str, Any],
     """Admission's device half: scatter a prefilled solo dense cache into the
     pools at the pages ``assign`` maps (logical -> physical; scratch page 0
     for logical pages that were prefix hits or past the allocation, so shared
-    pages are never rewritten)."""
+    pages are never rewritten).  Quantized pools quantize on the way in,
+    scattering values and the matching scale rows under the same indices."""
+    from repro.models import attention as attn_mod
+
     def scat(pool_axis):
-        def f(pool_leaf, dense_leaf):
+        def f(pool_cache, dense_leaf, key, skey):
+            pool_leaf = pool_cache[key]
             page = pool_leaf.shape[pool_axis + 1]
             M = assign.shape[0]
             lead = dense_leaf.shape[:pool_axis]          # (reps,) or ()
             paged = dense_leaf.reshape(
                 lead + (M, page) + dense_leaf.shape[pool_axis + 2:])
-            if pool_axis == 1:
-                return pool_leaf.at[:, assign].set(
-                    paged.astype(pool_leaf.dtype))
-            return pool_leaf.at[assign].set(paged.astype(pool_leaf.dtype))
+            written = {}
+            if skey in pool_cache:
+                paged, scales = attn_mod.kv_quantize(paged)
+                written[skey] = (
+                    pool_cache[skey].at[:, assign].set(scales)
+                    if pool_axis == 1 else
+                    pool_cache[skey].at[assign].set(scales))
+            written[key] = (
+                pool_leaf.at[:, assign].set(paged.astype(pool_leaf.dtype))
+                if pool_axis == 1 else
+                pool_leaf.at[assign].set(paged.astype(pool_leaf.dtype)))
+            return written
         return f
 
     out = {"slots": {}, "tail": {}, "pos": pstate["pos"]}
     for i in pstate["slots"]:
-        out["slots"][i] = {"cache": {
-            "kp": scat(1)(pstate["slots"][i]["cache"]["kp"],
-                          solo["slots"][i]["cache"]["k"]),
-            "vp": scat(1)(pstate["slots"][i]["cache"]["vp"],
-                          solo["slots"][i]["cache"]["v"])}}
+        cache = {}
+        cache.update(scat(1)(pstate["slots"][i]["cache"],
+                             solo["slots"][i]["cache"]["k"], "kp", "ksc"))
+        cache.update(scat(1)(pstate["slots"][i]["cache"],
+                             solo["slots"][i]["cache"]["v"], "vp", "vsc"))
+        out["slots"][i] = {"cache": cache}
     for i in pstate["tail"]:
-        out["tail"][i] = {"cache": {
-            "kp": scat(0)(pstate["tail"][i]["cache"]["kp"],
-                          solo["tail"][i]["cache"]["k"]),
-            "vp": scat(0)(pstate["tail"][i]["cache"]["vp"],
-                          solo["tail"][i]["cache"]["v"])}}
+        cache = {}
+        cache.update(scat(0)(pstate["tail"][i]["cache"],
+                             solo["tail"][i]["cache"]["k"], "kp", "ksc"))
+        cache.update(scat(0)(pstate["tail"][i]["cache"],
+                             solo["tail"][i]["cache"]["v"], "vp", "vsc"))
+        out["tail"][i] = {"cache": cache}
     return out
 
 

@@ -187,6 +187,10 @@ class PagedKVBackend(CacheBackend):
         if scfg.max_seq_len % scfg.page_size:
             raise ValueError(f"max_seq_len ({scfg.max_seq_len}) must be a "
                              f"multiple of page_size ({scfg.page_size})")
+        from repro.models.attention import KV_QUANT_MODES
+        if scfg.kv_quant not in KV_QUANT_MODES:
+            raise ValueError(f"kv_quant={scfg.kv_quant!r}: expected one of "
+                             f"{KV_QUANT_MODES}")
         self.page_size = scfg.page_size
         self.pages_per_seq = scfg.max_seq_len // scfg.page_size
         num_pages = scfg.num_pages or (scfg.max_batch * self.pages_per_seq + 1)
@@ -210,9 +214,11 @@ class PagedKVBackend(CacheBackend):
         # (fresh buffers, safe to stage on the sidecar) / write a faulted
         # page back in place.
         self._read_page_prog = programs.read_page_program()
+        self._read_pages_prog = programs.read_pages_program()
         self._write_page_prog = programs.write_page_program()
         eng.states = init_paged_decode_state(self.cfg, self.pool.num_pages,
-                                             self.page_size)
+                                             self.page_size,
+                                             kv_quant=self.scfg.kv_quant)
 
     # -- tiered-memory plane ---------------------------------------------------
     def _spill(self, page: int, chain: bytes) -> None:
@@ -268,9 +274,11 @@ class PagedKVBackend(CacheBackend):
         limit = (len(req.prompt) - 1) // pg
         pages: List[int] = []
         for chain in chains[:limit]:
-            page = self.pool.lookup(chain)
+            # Atomic hit + pin: a separate lookup()/ref() pair would let a
+            # concurrent alloc() evict the page in between and hand it to
+            # another slot (the late ref would pin foreign KV).
+            page = self.pool.lookup_and_ref(chain)
             if page is not None:
-                self.pool.ref(page)
                 pages.append(page)
                 continue
             page = self._fault_in(chain)        # alloc() already ref'd it
@@ -392,9 +400,13 @@ class PagedKVBackend(CacheBackend):
         eng = self.engine
         pg = self.page_size
         n_prompt = -(-len(req.prompt) // pg)
-        blobs = [jax.device_get(self._read_page_prog(
-                     eng.states, jnp.asarray(p, jnp.int32)))
-                 for p in req.pages[:n_prompt]]
+        # One stacked gather + one device->host transfer for every prompt
+        # page (a per-page device_get loop here is a host sync per page on
+        # the prefill hot path — the HOST_SYNC_LOOP analysis rule pins this).
+        idx = jnp.asarray(req.pages[:n_prompt], jnp.int32)
+        stacked = jax.device_get(self._read_pages_prog(eng.states, idx))
+        blobs = [jax.tree.map(lambda a, i=i: a[i], stacked)
+                 for i in range(n_prompt)]
         return KVHandoff(
             rid=rid, prompt_len=len(req.prompt),
             max_new_tokens=max_new_tokens, first_token=first_token,
@@ -615,6 +627,11 @@ class SnapshotBackend(CacheBackend):
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig):
         super().__init__(cfg, scfg)
+        if scfg.kv_quant != "none":
+            raise ValueError(
+                f"kv_quant={scfg.kv_quant!r}: snapshot-backend archs "
+                f"({cfg.arch_id}) have no paged KV to quantize — their "
+                "decode state stays f32; serve them with kv_quant='none'")
         self.pool = SnapshotPool(max(1, scfg.snapshot_slots))
         self.cold = ColdTier(scfg.cold_pages) if scfg.cold_pages > 0 else None
         # Cold-boundary bookkeeping and tier counters are mutated on the

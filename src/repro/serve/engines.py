@@ -405,7 +405,7 @@ class ContinuousEngine:
             nonlocal total
             last = path[-1]
             if (isinstance(last, jax.tree_util.DictKey)
-                    and last.key in ("k", "v", "kp", "vp")):
+                    and last.key in ("k", "v", "kp", "vp", "ksc", "vsc")):
                 total += leaf.nbytes
             return leaf
         jax.tree_util.tree_map_with_path(visit, self.states)

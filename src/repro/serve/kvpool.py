@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import importlib
+import io
 import pickle
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -177,7 +179,13 @@ class KVBlockPool:
 
     # -- prefix index ----------------------------------------------------------
     def lookup(self, chain: bytes) -> Optional[int]:
-        """Hot hit: returns the page (caller must ref() it) or None."""
+        """Hot hit: returns the page or None.  NOTE: this does *not* pin the
+        page — between this call and a later ``ref()``, ``alloc()`` on
+        another thread may evict a cached page and hand it to a different
+        slot (the ref would then pin someone else's KV).  Callers that
+        intend to use the page must call :meth:`lookup_and_ref` instead;
+        bare lookup is only safe for stats/affinity probes and
+        single-threaded tests."""
         with self._lock:
             self.lookup_pages += 1
             page = self._index.get(chain)
@@ -186,6 +194,23 @@ class KVBlockPool:
             self.hit_pages += 1
             if page in self._cached:
                 self._cached.move_to_end(page)   # touched: most-recently-used
+            return page
+
+    def lookup_and_ref(self, chain: bytes) -> Optional[int]:
+        """Atomic hot hit + pin: hit counters, LRU touch, and the refcount
+        increment all happen in one critical section, so a concurrent
+        ``alloc()`` can never evict the page between the index read and the
+        pin (the lookup()-then-ref() race: the evicted page gets handed to
+        another slot and the late ref() pins foreign KV)."""
+        with self._lock:
+            self.lookup_pages += 1
+            page = self._index.get(chain)
+            if page is None:
+                return None
+            self.hit_pages += 1
+            if self._refs[page] == 0:
+                self._cached.pop(page, None)     # pinned: off the LRU
+            self._refs[page] += 1
             return page
 
     def probe(self, chain: bytes) -> bool:
@@ -347,10 +372,49 @@ def pack_handoff(h: Any) -> bytes:
     return pickle.dumps(h, protocol=pickle.HIGHEST_PROTOCOL)
 
 
+# Exactly the types a packed handoff is built from: the two handoff
+# dataclasses and the numpy array/scalar/dtype reconstruction machinery
+# (page blobs are numpy trees, sampling params are numpy scalars).  The
+# ``numpy._core`` aliases cover numpy >= 2 pickles read under either layout.
+_HANDOFF_SAFE = {
+    ("repro.serve.kvpool", "KVHandoff"),
+    ("repro.serve.backends", "SnapshotHandoff"),
+    ("numpy", "ndarray"),
+    ("numpy", "dtype"),
+    ("numpy.core.multiarray", "_reconstruct"),
+    ("numpy._core.multiarray", "_reconstruct"),
+    ("numpy.core.multiarray", "scalar"),
+    ("numpy._core.multiarray", "scalar"),
+    ("numpy.core.numeric", "_frombuffer"),
+    ("numpy._core.numeric", "_frombuffer"),
+}
+
+
+class _HandoffUnpickler(pickle.Unpickler):
+    """Restricted unpickler for handoff blobs: bytes coming back off a
+    ``ShardedStore``/``BlobEndpoint`` get to construct handoff dataclasses
+    and numpy arrays, nothing else — a corrupt or hostile blob cannot reach
+    arbitrary constructors through ``find_class``."""
+
+    def find_class(self, module: str, name: str):
+        if (module, name) not in _HANDOFF_SAFE:
+            raise pickle.UnpicklingError(
+                f"handoff blob references disallowed global {module}.{name}")
+        return getattr(importlib.import_module(module), name)
+
+
 def unpack_handoff(data: bytes) -> Any:
     """Deserialize a transported handoff blob.  Returns whatever handoff
     object was packed (``KVHandoff``, ``SnapshotHandoff``); a legacy plain
     dict is coerced to ``KVHandoff``.  Type validation against the target
-    backend happens in ``CacheBackend.import_handoff``."""
-    obj = pickle.loads(data)
+    backend happens in ``CacheBackend.import_handoff``.
+
+    Unpickling is restricted (see ``_HandoffUnpickler``) and any failure —
+    truncated blob, corrupt stream, disallowed global — surfaces as the same
+    "stale/malformed handoff" ``ValueError`` the importers already route to
+    the request's error record, instead of an arbitrary unpickling error."""
+    try:
+        obj = _HandoffUnpickler(io.BytesIO(data)).load()
+    except Exception as e:
+        raise ValueError(f"stale/malformed handoff blob: {e}") from e
     return KVHandoff(**obj) if isinstance(obj, dict) else obj

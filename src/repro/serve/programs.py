@@ -20,7 +20,7 @@ import jax
 from repro.config.model import ModelConfig
 from repro.models.transformer import (
     ExecPolicy, init_decode_state, insert_decode_slot, read_decode_slot,
-    read_page, scatter_solo_pages, write_page)
+    read_page, read_pages, scatter_solo_pages, write_page)
 from repro.serve.sampler import sample_slots
 from repro.train.steps import (
     make_bucket_prefill_step, make_decode_step, make_paged_decode_step,
@@ -176,6 +176,13 @@ def resume_admit_program(cfg: ModelConfig, policy: ExecPolicy):
 @functools.lru_cache(maxsize=None)
 def read_page_program():
     return jax.jit(read_page)
+
+
+@functools.lru_cache(maxsize=None)
+def read_pages_program():
+    """Batched page read for handoff export: one gather + one transfer for a
+    request's whole prompt instead of a host sync per page."""
+    return jax.jit(read_pages)
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,0 +1,9 @@
+"""Seeded HOST_SYNC_LOOP violation: a hot root syncs to host once *per
+page* inside a loop (the pattern the batched export_handoff removed)."""
+
+
+def export_handoff(pages, states):
+    blobs = []
+    for p in pages:
+        blobs.append(p.item())  # seeded violation: per-page sync in a loop
+    return blobs

@@ -65,6 +65,16 @@ def test_host_sync_reports_the_seeded_violation():
     assert ".item()" in found[0].message
 
 
+def test_host_sync_loop_reports_the_seeded_violation():
+    """A sync lexically inside a loop in a hot function is the amplified
+    per-page variant: it must surface as HOST_SYNC_LOOP (replacing, not
+    duplicating, the plain HOST_SYNC finding)."""
+    found = run_passes(fixture("bad_sync_loop.py"))
+    assert keys(found) == [("HOST_SYNC_LOOP", "export_handoff")]
+    assert "inside a loop" in found[0].message
+    assert ".item()" in found[0].message
+
+
 def test_impure_builder_reports_the_seeded_violation():
     found = run_passes(fixture("bad_builder.py"))
     assert keys(found) == [("IMPURE_BUILDER", "make_decode_program.program")]
@@ -81,7 +91,8 @@ def test_fixture_sweep_finds_every_seeded_rule_once():
     found = run_passes(FIXTURES)
     rules = sorted(f.rule for f in found)
     assert rules == sorted(["LOCK_GUARD", "LOCK_ORDER", "HOST_SYNC",
-                            "IMPURE_BUILDER", "KERNEL_GUARD"])
+                            "HOST_SYNC_LOOP", "IMPURE_BUILDER",
+                            "KERNEL_GUARD"])
 
 
 # ---------------------------------------------------------------------------
@@ -124,7 +135,8 @@ def test_cli_gate_is_clean_on_the_real_tree():
 
 def test_cli_gate_fails_on_each_seeded_fixture():
     for name in ("bad_guard.py", "bad_order.py", "bad_sync.py",
-                 "bad_builder.py", os.path.join("kernels", "badk", "ops.py")):
+                 "bad_sync_loop.py", "bad_builder.py",
+                 os.path.join("kernels", "badk", "ops.py")):
         proc = _cli("--check", fixture(name), "--allowlist", "none")
         assert proc.returncode == 1, (name, proc.stdout, proc.stderr)
 

@@ -89,6 +89,93 @@ def test_handoff_roundtrip_page_equivalence(tiny_engine_parts, tmp_path):
     dec.close()
 
 
+def test_handoff_roundtrip_quantized_pages(tiny_engine_parts, tmp_path):
+    """With kv_quant=int8 the handoff ships int8 page values + f32 scales:
+    the packed blob is >=3x smaller than the f32 handoff for the same
+    prompt, and the decode-side import lands every page (values and
+    scales) bit-exactly."""
+    cfg, params = tiny_engine_parts
+    rng = np.random.default_rng(5)
+    prompt = _prompt(rng, cfg, 17)               # 3 pages, last one partial
+
+    worker = PrefillWorker(cfg, params, _scfg(kv_quant="int8"))
+    h = worker.prefill_to_handoff(3, prompt, 8, SamplingParams())
+    assert h is not None and len(h.page_blobs) == 3
+    dtypes = {np.asarray(leaf).dtype for leaf in jax.tree.leaves(h.page_blobs[0])}
+    assert np.dtype(np.int8) in dtypes           # quantized values on the wire
+    assert np.dtype(np.float32) in dtypes        # per-page scales ride along
+
+    f32_worker = PrefillWorker(cfg, params, _scfg())
+    hf = f32_worker.prefill_to_handoff(3, prompt, 8, SamplingParams())
+    shrink = len(pack_handoff(hf)) / len(pack_handoff(h))
+    assert shrink >= 3.0, shrink
+
+    peers = EndpointRegistry.local_peers(str(tmp_path), 2).peers()
+    store = ShardedStore([BlobEndpoint(p) for p in peers])
+    store.put("kv/3", pack_handoff(h))
+    h2 = unpack_handoff(store.pop("kv/3"))
+    for b1, b2 in zip(h.page_blobs, h2.page_blobs):
+        _leaves_equal(b1, b2)
+
+    dec = DisaggregatedEngine(
+        cfg, params,
+        _scfg(kv_quant="int8", disagg_route="remote", prefix_cache=False))
+    req = Request(3, prompt, 8)
+    tok0 = dec.backend.import_handoff(req, h2)
+    assert tok0 == h.first_token
+    for i, blob in enumerate(h.page_blobs):
+        got = jax.device_get(dec.backend._read_page_prog(
+            dec.states, jnp.asarray(req.pages[i], jnp.int32)))
+        _leaves_equal(got, blob)
+    worker.close()
+    f32_worker.close()
+    dec.close()
+
+
+def test_disaggregated_int8_matches_single_int8_engine(tiny_engine_parts):
+    """Quantization must not reintroduce prefill/decode drift: the
+    disaggregated int8 path decodes bit-identically to the single-process
+    int8 PagedEngine (both quantize pages the same way at write time)."""
+    cfg, params = tiny_engine_parts
+    rng = np.random.default_rng(6)
+    prompts = [_prompt(rng, cfg, n) for n in (5, 12, 17)]
+    single = PagedEngine(cfg, params, _scfg(kv_quant="int8"))
+    dis = DisaggregatedEngine(
+        cfg, params, _scfg(kv_quant="int8", disagg_route="remote"))
+    a = single.generate(prompts, 6)
+    b = dis.generate(prompts, 6)
+    for i in range(len(prompts)):
+        assert a[i].output == b[i].output
+    assert dis.stats()["handoffs"]["remote_admits"] == len(prompts)
+    single.close()
+    dis.close()
+
+
+def test_unpack_handoff_rejects_malformed_blobs(tiny_engine_parts):
+    """A truncated stream, a non-pickle payload, and a pickle referencing a
+    global outside the handoff allowlist must all surface as the same
+    stale/malformed ValueError importers route to the request record —
+    never an arbitrary unpickle error or constructor call."""
+    import pickle
+
+    cfg, params = tiny_engine_parts
+    with pytest.raises(ValueError, match="stale/malformed handoff"):
+        unpack_handoff(b"not a pickle at all")
+    rng = np.random.default_rng(7)
+    worker = PrefillWorker(cfg, params, _scfg())
+    h = worker.prefill_to_handoff(1, _prompt(rng, cfg, 9), 4,
+                                  SamplingParams())
+    blob = pack_handoff(h)
+    with pytest.raises(ValueError, match="stale/malformed handoff"):
+        unpack_handoff(blob[: len(blob) // 2])   # truncated mid-stream
+    # a format-drifted / hostile blob referencing a non-allowlisted global
+    evil = pickle.dumps(ServeConfig())
+    with pytest.raises(ValueError, match="stale/malformed handoff"):
+        unpack_handoff(evil)
+    assert unpack_handoff(blob).first_token == h.first_token
+    worker.close()
+
+
 def test_disaggregated_matches_single_engine(tiny_engine_parts):
     """Remote-prefilled requests must decode bit-identically to the
     single-engine PagedEngine, including across shared prefixes."""
