@@ -1,0 +1,162 @@
+"""Diff the current ``BENCH_*.json`` set against a committed baseline.
+
+``_emit.emit`` gives every benchmark a machine-readable artifact; this tool
+closes the loop by turning a new set of artifacts into a regression report
+instead of a pile of JSON to eyeball:
+
+    PYTHONPATH=src python benchmarks/compare.py                  # report
+    PYTHONPATH=src python benchmarks/compare.py --update-baseline
+
+``METRICS`` names each benchmark's headline metrics, their improvement
+direction, and whether they are *portable*.  Ratios and rates (speedups,
+acceptance/exact-match/hit rates) transfer between machines, so regressions
+on them fail the run (beyond ``--tolerance``).  Absolute timings (tok/s,
+wall, TTFT) are load- and host-dependent: they are always *printed* with
+their delta, but only fail under ``--strict-abs`` — CI compares artifacts
+produced on the runner itself, a laptop compares against the committed
+container numbers, and only the former comparison is apples-to-apples.
+
+The baseline (``benchmarks/baseline.json``) is a frozen copy of the metric
+values plus the git SHA they came from; refresh it with
+``--update-baseline`` whenever a PR legitimately moves the numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+# bench name -> dotted metric path -> (direction, portable)
+# direction: +1 higher is better, -1 lower is better.
+METRICS: Dict[str, Dict[str, tuple]] = {
+    "serve_continuous": {
+        "speedup": (+1, True),
+        "continuous.tok_s": (+1, False),
+        "continuous.mean_ttft_s": (-1, False),
+    },
+    "serve_paged": {
+        "exact_match_rate": (+1, True),
+        "paged.prefix_hit_rate": (+1, True),
+        "paged.tok_s": (+1, False),
+        "dense.tok_s": (+1, False),
+    },
+    "serve_disaggregated": {
+        "exact_match_rate": (+1, True),
+        "disaggregated_int8.handoff_shrink_x": (+1, True),
+        "disaggregated.tok_s_decode": (+1, False),
+    },
+    "serve_cluster": {
+        "qos.ratio": (+1, True),
+        "scaling.r4.tok_s_parallel": (+1, False),
+    },
+    "serve_mixed_arch": {
+        "aggregate_tok_s_parallel": (+1, False),
+    },
+    "serve_speculative": {
+        "speedup_x": (+1, True),
+        "acceptance_rate": (+1, True),
+        "speculative_tok_s": (+1, False),
+        "sequential_tok_s": (+1, False),
+    },
+}
+
+
+def dig(payload: Dict[str, Any], path: str) -> Optional[float]:
+    node: Any = payload
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return float(node) if isinstance(node, (int, float)) else None
+
+
+def collect() -> Dict[str, Dict[str, float]]:
+    """Current metric values from the repo-root BENCH artifacts."""
+    out: Dict[str, Dict[str, float]] = {}
+    for name, metrics in METRICS.items():
+        path = REPO_ROOT / f"BENCH_{name}.json"
+        if not path.exists():
+            continue
+        payload = json.loads(path.read_text())
+        got = {m: v for m in metrics
+               if (v := dig(payload, m)) is not None}
+        if got:
+            got["_smoke"] = float(bool(payload.get("smoke")))
+            got["_git_sha"] = payload.get("git_sha", "unknown")
+            out[name] = got
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="relative worsening allowed on portable metrics "
+                         "before the run fails (default 5%%)")
+    ap.add_argument("--strict-abs", action="store_true",
+                    help="also fail on absolute-timing regressions (use "
+                         "when baseline and current ran on the same host)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help=f"rewrite {BASELINE.name} from the current "
+                         "BENCH_*.json set")
+    args = ap.parse_args()
+
+    current = collect()
+    if args.update_baseline:
+        BASELINE.write_text(
+            json.dumps(current, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {BASELINE} from {len(current)} benchmark artifacts")
+        return
+    if not BASELINE.exists():
+        sys.exit(f"no baseline at {BASELINE}; run --update-baseline first")
+    baseline = json.loads(BASELINE.read_text())
+
+    failures = []
+    print(f"{'benchmark':<22} {'metric':<36} {'baseline':>10} "
+          f"{'current':>10} {'delta':>8}")
+    for name in sorted(set(baseline) | set(current)):
+        if name not in current:
+            print(f"{name:<22} {'<artifact missing>':<36}")
+            continue
+        base = baseline.get(name, {})
+        # Smoke traces are a different scale than full runs — comparing
+        # across the flag would report noise, so mismatched pairs are
+        # printed but never failed.
+        comparable = base.get("_smoke") == current[name].get("_smoke")
+        if base and not comparable:
+            print(f"{name:<22} <smoke/full mismatch vs baseline: "
+                  f"report only>")
+        for metric, (sign, portable) in METRICS[name].items():
+            b, c = base.get(metric), current[name].get(metric)
+            if c is None:
+                failures.append(f"{name}:{metric} missing from artifact")
+                continue
+            if b is None:
+                print(f"{name:<22} {metric:<36} {'-':>10} {c:>10.4g} "
+                      f"{'new':>8}")
+                continue
+            delta = (c - b) / abs(b) if b else 0.0
+            worse = comparable and sign * delta < -args.tolerance
+            flag = ""
+            if worse:
+                flag = "REGRESS" if portable or args.strict_abs else "(abs)"
+            if worse and (portable or args.strict_abs):
+                failures.append(
+                    f"{name}:{metric} {b:.4g} -> {c:.4g} "
+                    f"({delta:+.1%}, tolerance {args.tolerance:.0%})")
+            print(f"{name:<22} {metric:<36} {b:>10.4g} {c:>10.4g} "
+                  f"{delta:>+7.1%} {flag}")
+    if failures:
+        print("\nregressions:")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print("\nno regressions beyond tolerance")
+
+
+if __name__ == "__main__":
+    main()

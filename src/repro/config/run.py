@@ -134,6 +134,19 @@ class ServeConfig:
     prefill_pages: int = 0           # prefill-endpoint pool pages (0 -> full
     #                                  residency, like num_pages)
     handoff_shards: int = 2          # ShardedStore endpoints for handoffs
+    # Speculative decoding: a small greedy drafter proposes ``draft_k``
+    # tokens per slot; the target scores all k+1 positions in one batched
+    # verify step and accepts the longest matching greedy prefix.  Exact for
+    # greedy requests (accepted chunks are bit-identical to sequential
+    # decode); stochastic slots fall back to one token per step.
+    speculative: bool = False
+    draft_k: int = 4                 # drafted tokens per macro step (>= 1)
+    draft_model: str = "self:1"      # "self:<n>" -> first-n-layer truncation
+    #                                  of the target (shared embed/unembed);
+    #                                  "self-int8" -> int8-quantized copy of
+    #                                  the target; any other value -> an arch
+    #                                  name from configs/ (independent
+    #                                  random-init drafter, same vocab)
     # Engine selection (EngineMode): "" -> "continuous".
     engine_mode: str = ""
     # Multi-replica serve cluster (ServeCluster, engine_mode="cluster"):

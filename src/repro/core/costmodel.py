@@ -75,6 +75,9 @@ class ReplicaSignals:
     # (snapshot backends: one hit "unit" can cover an arbitrary prefix
     # length); -1 means derive from hit_pages * page_size (paged backends).
     hit_tokens: int = -1
+    # Measured speculative throughput multiplier (committed tokens per
+    # decode dispatch; 1.0 = not speculating / no evidence yet).
+    spec_boost: float = 1.0
     alive: bool = True
 
 
@@ -171,6 +174,13 @@ class CostModel:
         if short > 0:
             # Pages must come from evictions (spill traffic) or deferral.
             cost *= 1.0 + short
+        if r.spec_boost > 1.0:
+            # Speculative replicas commit spec_boost tokens per decode
+            # dispatch (measured acceptance), so everything behind decode
+            # progress — queue drain, slot turnover, eviction pressure —
+            # arrives that much sooner.  The request's own suffix prefill
+            # is unaffected: prefill doesn't speculate.
+            cost = suffix + (cost - suffix) / r.spec_boost
         return cost
 
     def decide_replica(self, prompt_tokens: int, pages_needed: int,

@@ -53,6 +53,16 @@ def main() -> None:
                     choices=("auto", "remote", "local"),
                     help="prefill routing: cost model per request (auto) "
                          "or forced (engine-mode=disaggregated)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative decoding: a drafter proposes "
+                         "--draft-k tokens per slot, the target verifies "
+                         "them in one batched forward (greedy rows only)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens proposed per macro decode step")
+    ap.add_argument("--draft-model", default="self:1",
+                    help="drafter spec: 'self:<n>' (first n target layers), "
+                         "'self-int8' (int8-quantized target), or a "
+                         "registry arch name with the same vocab")
     args = ap.parse_args()
 
     mode = args.engine_mode
@@ -65,6 +75,9 @@ def main() -> None:
                        page_size=args.page_size, num_pages=args.num_pages,
                        prefix_cache=not args.no_prefix_cache,
                        kv_quant=args.kv_quant,
+                       speculative=args.speculative,
+                       draft_k=args.draft_k,
+                       draft_model=args.draft_model,
                        disagg_route=args.route,
                        engine_mode=mode or EngineMode.CONTINUOUS.value,
                        num_replicas=args.replicas)

@@ -209,29 +209,27 @@ def self_attention(
 def cache_write(cache: dict, k: jax.Array, v: jax.Array, positions: jax.Array) -> dict:
     """Write S new kv entries at slots ``pos % C`` (ring for SWA caches).
 
-    Decode (S == 1) writes per row, so a continuously-batched step may hold
-    rows at different absolute positions.  Prefill (S > 1) still assumes
-    batch-aligned positions (all rows share positions[0]) — the admission
-    plane prefills one request at a time.
+    Every S < C write is a per-row scatter, so a continuously-batched step
+    (S == 1) or a speculative verify chunk (S == k+1) may hold rows at
+    different absolute positions.  Only the ring-truncation path (S >= C)
+    still assumes batch-aligned positions (all rows share positions[0]) —
+    that shape only occurs on the single-request admission plane.
     """
     C = cache["k"].shape[1]
     S = k.shape[1]
-    slots = positions[0] % C                     # (S,)
-    if S == 1:
-        B = k.shape[0]
-        rows = jnp.arange(B)
-        row_slots = positions[:, 0] % C          # (B,) — per-row ring slot
-        new_k = cache["k"].at[rows, row_slots].set(k[:, 0])
-        new_v = cache["v"].at[rows, row_slots].set(v[:, 0])
+    B = k.shape[0]
+    if S < C:
+        rows = jnp.arange(B)[:, None]
+        row_slots = positions % C                # (B, S) — per-row ring slots
+        new_k = cache["k"].at[rows, row_slots].set(k)
+        new_v = cache["v"].at[rows, row_slots].set(v)
         new_p = cache["pos"].at[rows, row_slots].set(
-            positions[:, 0].astype(jnp.int32))
+            positions.astype(jnp.int32))
     else:
-        # prefill: scatter S entries (handles ring wrap when S > C)
-        if S >= C:
-            # keep only the last C tokens (ring semantics)
-            k, v = k[:, -C:], v[:, -C:]
-            positions = positions[:, -C:]
-            slots = positions[0] % C
+        # prefill ring wrap: keep only the last C tokens (ring semantics)
+        k, v = k[:, -C:], v[:, -C:]
+        positions = positions[:, -C:]
+        slots = positions[0] % C                 # (C,) batch-aligned
         new_k = cache["k"].at[:, slots].set(k)
         new_v = cache["v"].at[:, slots].set(v)
         new_p = cache["pos"].at[:, slots].set(positions.astype(jnp.int32))
@@ -302,26 +300,30 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
 
 def paged_cache_write(cache: dict, k: jax.Array, v: jax.Array,
                       positions: jax.Array, table: jax.Array) -> dict:
-    """Decode-step write: row ``b``'s token at position ``p`` lands in
-    physical page ``table[b, p // page]`` at offset ``p % page``.
+    """Decode/verify write: row ``b``'s token at position ``p`` lands in
+    physical page ``table[b, p // page]`` at offset ``p % page``.  S > 1
+    (a speculative verify chunk) scatters all B*S entries in one shot; each
+    entry resolves its own page through the row's block table, so a chunk
+    may straddle a page boundary.
 
     Rows whose slot was released have their table row pointed at the scratch
     page (0) by the admission plane, so their garbage writes never touch a
     live page; duplicate scratch indices in the scatter are harmless."""
-    B = k.shape[0]
+    B, S = k.shape[0], k.shape[1]
     page = cache["kp"].shape[1]
     M = table.shape[1]
-    pos = positions[:, 0]                                   # (B,)
-    rows = jnp.arange(B)
-    logical = jnp.minimum(pos // page, M - 1)               # clamp dead rows
-    phys = table[rows, logical]                             # (B,)
-    off = pos % page
+    rows = jnp.arange(B)[:, None]                           # (B, 1)
+    logical = jnp.minimum(positions // page, M - 1)         # clamp dead rows
+    phys = table[rows, logical].reshape(-1)                 # (B*S,)
+    off = (positions % page).reshape(-1)                    # (B*S,)
+    kf = k.reshape(B * S, *k.shape[2:])
+    vf = v.reshape(B * S, *v.shape[2:])
     if "ksc" in cache:
-        # Quantize-on-write: the new token's K/V rows land as int8 values
+        # Quantize-on-write: the new tokens' K/V rows land as int8 values
         # plus their per-(row, head) scales, so decode appends cost the same
         # bytes as prefilled pages and attention dequantizes uniformly.
-        kq, ks = kv_quantize(k[:, 0])
-        vq, vs = kv_quantize(v[:, 0])
+        kq, ks = kv_quantize(kf)
+        vq, vs = kv_quantize(vf)
         return {
             "kp": cache["kp"].at[phys, off].set(kq),
             "vp": cache["vp"].at[phys, off].set(vq),
@@ -329,24 +331,27 @@ def paged_cache_write(cache: dict, k: jax.Array, v: jax.Array,
             "vsc": cache["vsc"].at[phys, off].set(vs),
         }
     return {
-        "kp": cache["kp"].at[phys, off].set(k[:, 0].astype(cache["kp"].dtype)),
-        "vp": cache["vp"].at[phys, off].set(v[:, 0].astype(cache["vp"].dtype)),
+        "kp": cache["kp"].at[phys, off].set(kf.astype(cache["kp"].dtype)),
+        "vp": cache["vp"].at[phys, off].set(vf.astype(cache["vp"].dtype)),
     }
 
 
 def paged_attend(q: jax.Array, cache: dict, positions: jax.Array,
                  table: jax.Array, *, cap: float = 0.0,
                  use_kernel: bool = False) -> jax.Array:
-    """Decode attention over the page pool.  q (B, 1, J, G, N) pre-scaled.
+    """Decode attention over the page pool.  q (B, S, J, G, N) pre-scaled;
+    S == 1 is the ordinary decode step, S == k+1 a speculative verify chunk
+    (each query position masks its own causal horizon, so stale entries
+    beyond a row's last write are invisible).
 
-    Kernel path (TPU): the Pallas kernel DMAs K/V page-by-page through the
-    block table — the quantized variant dequantizes inside the kernel, so
-    f32 pages are never materialized.  Oracle path: gather the logical view
-    (dequantizing if the pool carries scale leaves) and reuse ``attend`` —
-    bit-identical to the dense-cache decode for f32 pools."""
-    lengths = positions[:, 0] + 1                           # just wrote at pos
+    Kernel path (TPU, S == 1 only): the Pallas kernel DMAs K/V page-by-page
+    through the block table — the quantized variant dequantizes inside the
+    kernel, so f32 pages are never materialized.  Oracle path: gather the
+    logical view (dequantizing if the pool carries scale leaves) and reuse
+    ``attend`` — bit-identical to the dense-cache decode for f32 pools."""
+    lengths = positions[:, -1] + 1                          # just wrote up to
     quant = "ksc" in cache
-    if use_kernel:
+    if use_kernel and q.shape[1] == 1:
         from repro.kernels.paged_attention import ops as pa_ops
         if pa_ops.supported(q[:, 0], cache["kp"], cap=cap):
             if quant:

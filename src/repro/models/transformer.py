@@ -182,6 +182,35 @@ def read_decode_slot(state: Dict[str, Any], slot) -> Dict[str, Any]:
     return out
 
 
+def select_decode_rows(mask: jax.Array, a: Dict[str, Any],
+                       b: Dict[str, Any]) -> Dict[str, Any]:
+    """Per-row merge of two same-shape batched decode states: row ``i`` of
+    the result comes from ``a`` where ``mask[i]`` is true, else from ``b``.
+
+    The device half of speculative all-or-nothing commit for snapshot archs:
+    rows whose whole draft chunk verified keep the multi-token post-verify
+    state, rejected rows fall back to the single-step state.  Stacked
+    ("slots") leaves carry the batch on axis 1, unstacked ("tail") and
+    encoder-memory leaves on axis 0 — same convention as
+    :func:`insert_decode_slot`."""
+    def sel(axis):
+        def f(x, y):
+            shape = [1] * x.ndim
+            shape[axis] = mask.shape[0]
+            return jnp.where(mask.reshape(shape), x, y)
+        return f
+
+    out: Dict[str, Any] = {
+        "slots": (jax.tree.map(sel(1), a["slots"], b["slots"])
+                  if a["slots"] else {}),
+        "tail": jax.tree.map(sel(0), a["tail"], b["tail"]),
+        "pos": a["pos"],
+    }
+    if "enc_out" in a:
+        out["enc_out"] = sel(0)(a["enc_out"], b["enc_out"])
+    return out
+
+
 def decode_state_nbytes(cfg: ModelConfig, capacity: int) -> int:
     """Bytes of one slot's decode state (the snapshot/handoff transfer unit
     for non-paged archs) — computed via ``eval_shape``, no allocation."""

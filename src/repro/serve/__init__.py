@@ -18,6 +18,10 @@ Module layout (the public API):
   * ``cluster``   — ``ServeCluster``: N decode replicas per model group
     behind a cost-model router with prefix affinity and per-tenant QoS
     (``TenantSpec``).
+  * ``speculative`` — ``DraftPlane`` / ``build_draft_plane``: the drafter
+    half of speculative decoding (``ServeConfig.speculative``), proposing
+    ``draft_k`` tokens per slot for the engines' batched verify-and-rollback
+    macro step.
   * ``factory``   — ``make_engine(cfg, params, scfg)`` keyed on
     ``repro.config.EngineMode``.
   * ``sampler`` / ``kvpool`` — sampling params/programs and the paged
@@ -39,15 +43,17 @@ from repro.serve.kvpool import KVBlockPool, KVHandoff
 from repro.serve.router import ClusterRouter
 from repro.serve.sampler import SamplingParams
 from repro.serve.scheduler import (
-    needs_exact_prefill, normalize_stop, QueueFull, Request, Scheduler,
-    SlotTable)
+    hit_stop, hit_stop_at, needs_exact_prefill, normalize_stop, QueueFull,
+    Request, Scheduler, SlotTable)
+from repro.serve.speculative import DraftPlane, build_draft_plane
 
 __all__ = [
-    "CacheBackend", "ClusterRouter", "ContinuousEngine",
+    "CacheBackend", "ClusterRouter", "ContinuousEngine", "DraftPlane",
     "DisaggregatedEngine", "EngineMode", "FixedBatchEngine", "KVBlockPool",
     "KVHandoff", "PagedEngine", "PagedKVBackend", "PrefillWorker",
     "QueueFull", "Request", "SamplingParams", "Scheduler", "ServeCluster",
     "ServeEngine", "SlotTable", "SnapshotBackend", "SnapshotHandoff",
-    "TenantSpec", "TokenBucket", "make_backend", "make_engine",
-    "needs_exact_prefill", "normalize_stop", "resolve_engine_mode",
+    "TenantSpec", "TokenBucket", "build_draft_plane", "hit_stop",
+    "hit_stop_at", "make_backend", "make_engine", "needs_exact_prefill",
+    "normalize_stop", "resolve_engine_mode",
 ]

@@ -86,6 +86,7 @@ class CacheBackend:
         self.engine: Any = None
         self._prompt_tokens = 0       # guarded-by: engine._lock
         self._hit_tokens = 0          # guarded-by: engine._lock
+        self._rolled_back = 0         # guarded-by: engine._lock
 
     def bind(self, engine) -> None:
         self.engine = engine
@@ -98,6 +99,23 @@ class CacheBackend:
     def decode_step(self) -> np.ndarray:
         """One batched decode dispatch; returns the (B,) sampled tokens."""
         raise NotImplementedError
+
+    def verify_step(self, drafts: jax.Array,
+                    caps: jax.Array) -> Tuple[np.ndarray, np.ndarray]:
+        """Speculative verify dispatch (the engine's ``_verify_device``):
+        score a (B, k) draft chunk in one batched forward and return the
+        host (B, k+1) emitted chunk plus (B,) accept lengths, rewinding
+        this backend's write bookkeeping past rejected entries.  Only built
+        when the owning engine speculates."""
+        raise NotImplementedError
+
+    def _count_rollback(self, acc: np.ndarray, k: int) -> None:
+        """Accumulate rejected-suffix tokens across live rows (stochastic
+        rows reject all k by construction)."""
+        rolled = sum(k - int(acc[r.slot])
+                     for r in self.engine.slots.active())
+        with self.engine._lock:
+            self._rolled_back += rolled
 
     # -- admission -------------------------------------------------------------
     def admit(self, req: Request) -> Optional[int]:
@@ -216,6 +234,9 @@ class PagedKVBackend(CacheBackend):
         self._read_page_prog = programs.read_page_program()
         self._read_pages_prog = programs.read_pages_program()
         self._write_page_prog = programs.write_page_program()
+        if eng._draft is not None:
+            self._verify_prog = programs.paged_verify_program(
+                self.cfg, eng.policy, self.scfg.draft_k)
         eng.states = init_paged_decode_state(self.cfg, self.pool.num_pages,
                                              self.page_size,
                                              kv_quant=self.scfg.kv_quant)
@@ -481,6 +502,24 @@ class PagedKVBackend(CacheBackend):
             jnp.asarray(self._table))
         return np.asarray(toks_dev)
 
+    def verify_step(self, drafts: jax.Array,
+                    caps: jax.Array) -> Tuple[np.ndarray, np.ndarray]:
+        """Block-table verify: the chunk scatters through each row's own
+        pages (int8 pools re-cut per-entry scales on every write, so a
+        rejected entry overwritten by the next chunk gets a fresh scale —
+        no stale quantization survives a rollback).  Pages are reserved for
+        the full decode horizon at admission, so the write-position rewind
+        is pure bookkeeping: rewound entries stay inside the row's own
+        reservation, are causally masked until rewritten, and free with the
+        request at release — never handed to another slot mid-flight."""
+        eng = self.engine
+        eng.states, out, acc, eng._key, eng._mirrors = self._verify_prog(
+            eng.params, eng.states, eng._key, eng._mirrors,
+            jnp.asarray(self._table), drafts, caps)
+        out, acc = np.asarray(out), np.asarray(acc)
+        self._count_rollback(acc, int(drafts.shape[1]))
+        return out, acc
+
     def release(self, req: Optional[Request], slot: int) -> None:
         if req is not None:
             for p in req.pages:
@@ -492,11 +531,15 @@ class PagedKVBackend(CacheBackend):
         self._table[slot] = SCRATCH_PAGE
 
     def stats(self) -> Dict[str, Any]:
-        return {
+        s = {
             "kv_pool": self.pool.stats(),
             "cold_pages": len(self.cold) if self.cold is not None else 0,
             "prefix_hit_rate": self._hit_rate(),
         }
+        if self.engine is not None and self.engine._draft is not None:
+            with self.engine._lock:
+                s["spec_rolled_back_tokens"] = self._rolled_back
+        return s
 
 
 # ----------------------------------------------------------------------------
@@ -653,6 +696,9 @@ class SnapshotBackend(CacheBackend):
         self._decode_prog = programs.decode_program(self.cfg, eng.policy)
         self._read_slot_prog = programs.read_slot_program()
         self._insert_slot_prog = programs.insert_slot_program()
+        if eng._draft is not None:
+            self._verify_prog = programs.snapshot_verify_program(
+                self.cfg, eng.policy, self.scfg.draft_k)
         eng.states = init_decode_state(self.cfg, self.scfg.max_batch,
                                        capacity=self.scfg.max_seq_len)
 
@@ -894,16 +940,35 @@ class SnapshotBackend(CacheBackend):
             eng.params, eng.states, eng._key, eng._mirrors)
         return np.asarray(toks_dev)
 
+    def verify_step(self, drafts: jax.Array,
+                    caps: jax.Array) -> Tuple[np.ndarray, np.ndarray]:
+        """All-or-nothing verify for irreversible per-slot state: the fused
+        program keeps the pre-verify state alive (it is NOT donated) until
+        the per-row select commits — fully-matching rows take the chunk
+        state, any rejection takes the single-step fallback computed from
+        the same pre-verify snapshot, bit-identical to a non-speculative
+        step.  Accept lengths come back as 0 or k only."""
+        eng = self.engine
+        eng.states, out, acc, eng._key, eng._mirrors = self._verify_prog(
+            eng.params, eng.states, eng._key, eng._mirrors, drafts, caps)
+        out, acc = np.asarray(out), np.asarray(acc)
+        self._count_rollback(acc, int(drafts.shape[1]))
+        return out, acc
+
     def release(self, req: Optional[Request], slot: int) -> None:
         pass                # per-slot state is part of the batched tree
 
     def stats(self) -> Dict[str, Any]:
         with self.engine._lock:
             faults, spills = self.faults, self.spills
-        return {
+        s = {
             "snapshot_pool": dict(self.pool.stats(), faults=faults,
                                   spills=spills),
             "cold_snapshots": (len(self.cold) if self.cold is not None
                                else 0),
             "prefix_hit_rate": self._hit_rate(),
         }
+        if self.engine is not None and self.engine._draft is not None:
+            with self.engine._lock:
+                s["spec_rolled_back_tokens"] = self._rolled_back
+        return s

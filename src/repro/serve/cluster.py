@@ -122,6 +122,10 @@ class ClusterRequest:
     submitted_at: float
     model: str = "default"           # model group this request routes within
     stop: Tuple[Tuple[int, ...], ...] = ()
+    # Streaming: tokens land from whichever replica currently decodes the
+    # request; continuation rounds re-prefill output-so-far, so each token
+    # is delivered exactly once.  Cleared on the first exception it raises.
+    on_token: Optional[Callable[[int], None]] = None
     output: List[int] = dataclasses.field(default_factory=list)
     replica: int = -1                # current replica index (-1 = queued)
     rid: int = -1                    # rid on that replica
@@ -164,7 +168,8 @@ class ServeCluster:
                  profile: Optional[Any] = None,
                  clock: Callable[[], float] = time.time,
                  extra_models: Optional[
-                     Dict[str, Tuple[ModelConfig, Any]]] = None):
+                     Dict[str, Tuple[ModelConfig, Any]]] = None,
+                 drafter: Optional[Tuple[ModelConfig, Any]] = None):
         # time.time, not monotonic: TTFT subtracts this clock's submit stamp
         # from the engines' time.time first-token stamp — same epoch or bust.
         if scfg.num_replicas < 1:
@@ -193,9 +198,13 @@ class ServeCluster:
         for name, (mcfg, mparams) in self.models.items():
             for _ in range(scfg.num_replicas):
                 i = len(self.replicas)
+                # An explicit drafter override is built against the default
+                # group's weights; extra groups resolve their own from
+                # scfg.draft_model (e.g. a layer-skip of their own params).
                 self.replicas.append(PagedEngine(
                     mcfg, mparams, rep_scfg, policy, executor=self.executor,
-                    handoff_endpoints=handoff_eps, handoff_ns=f"r{i}/"))
+                    handoff_endpoints=handoff_eps, handoff_ns=f"r{i}/",
+                    drafter=(drafter if name == "default" else None)))
                 self._model_of.append(name)
         n_total = len(self.replicas)
         self.alive = [True] * n_total
@@ -203,9 +212,11 @@ class ServeCluster:
         self._prefills: Dict[str, PrefillWorker] = {}
         self.prefill: Optional[PrefillWorker] = None
         if scfg.cluster_prefill:
+            # Workers never decode, so they never speculate themselves.
             pre_scfg = dataclasses.replace(
                 scfg, max_batch=max(1, scfg.prefill_slots),
-                num_pages=scfg.prefill_pages, engine_mode="paged")
+                num_pages=scfg.prefill_pages, engine_mode="paged",
+                speculative=False)
             for name, (mcfg, mparams) in self.models.items():
                 self._prefills[name] = PrefillWorker(
                     mcfg, mparams, pre_scfg, policy, executor=self.executor)
@@ -250,13 +261,21 @@ class ServeCluster:
     # -- admission -------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, tenant: str = "default",
                sampling: Optional[SamplingParams] = None,
-               model: str = "default", stop=None) -> int:
+               model: str = "default", stop=None,
+               on_token: Optional[Callable[[int], None]] = None) -> int:
         """Enqueue one request under a tenant's QoS contract.  ``model``
         names the group it routes within; ``stop`` is a token-id stop
         sequence (or list of them) checked host-side after every decode
         step.  Raises ``QueueFull`` when the tenant is over its rate limit
         or the cluster queue is at capacity — callers get backpressure,
-        never a hang."""
+        never a hang.
+
+        ``on_token`` streams each committed token id (replica loop thread,
+        exactly once across preemptions/requeues — continuation rounds
+        re-prefill output already delivered).  One caveat: a stop sequence
+        that only completes *across* an admission-round boundary is caught
+        by the cluster-level rescan at finish, after its tokens already
+        streamed — the result payload is the truncated truth."""
         if self._closed.is_set():
             raise RuntimeError("cluster is closed; no new submissions")
         if model not in self.models:
@@ -285,7 +304,7 @@ class ServeCluster:
         cr = ClusterRequest(next(self._crid), spec, prompt, max_new_tokens,
                             sampling or SamplingParams.from_config(self.scfg),
                             submitted_at=self.clock(), model=model,
-                            stop=normalize_stop(stop))
+                            stop=normalize_stop(stop), on_token=on_token)
         self._pending.append(cr)
         return cr.crid
 
@@ -367,12 +386,32 @@ class ServeCluster:
         self._by_replica[idx][rid] = cr
         return True
 
+    def _token_relay(self, cr: ClusterRequest
+                     ) -> Optional[Callable[[int], None]]:
+        """Per-dispatch-round relay to the cluster request's callback: a
+        raising callback is cleared cluster-wide (later rounds attach
+        nothing) and the exception propagates so the replica's own
+        disable-and-count path still runs."""
+        if cr.on_token is None:
+            return None
+
+        def relay(tok: int) -> None:
+            cb = cr.on_token
+            if cb is None:
+                return
+            try:
+                cb(tok)
+            except Exception:
+                cr.on_token = None
+                raise
+        return relay
+
     def _submit_to(self, idx: int, cr: ClusterRequest, prompt: np.ndarray,
                    max_new: int) -> Optional[int]:
         rep = self.replicas[idx]
         try:
             rid = rep.submit(prompt, max_new, sampling=cr.sampling,
-                             stop=cr.stop)
+                             stop=cr.stop, on_token=self._token_relay(cr))
         except QueueFull:
             return None
         prefill = self._prefills.get(cr.model)
@@ -556,12 +595,24 @@ class ServeCluster:
                 "rate_limited": self.rate_limited,
                 "replica_deaths": self.deaths,
             }
-        return {
-            "replicas": [
-                dict(rep.stats(), alive=self.alive[i],
+        reps = [dict(rep.stats(), alive=self.alive[i],
                      busy_s=round(busy[i], 4),
                      model=self._model_of[i])
-                for i, rep in enumerate(self.replicas)],
+                for i, rep in enumerate(self.replicas)]
+        # Cluster-level speculative aggregate: sum the speculating
+        # replicas' proposal/acceptance counters so operators read one
+        # acceptance rate, not N.
+        specs = [r["speculative"] for r in reps if "speculative" in r]
+        spec = None
+        if specs:
+            prop = sum(s["proposed"] for s in specs)
+            acc = sum(s["accepted"] for s in specs)
+            spec = {"replicas": len(specs), "proposed": prop,
+                    "accepted": acc,
+                    "acceptance_rate": round(acc / prop, 4) if prop else 0.0}
+        return {
+            "replicas": reps,
+            "speculative": spec,
             "pending": len(self._pending),
             "inflight": len(self._inflight),
             "completed": completed,

@@ -97,15 +97,20 @@ class DisaggregatedEngine(PagedEngine):
                  executor: Optional[BackgroundExecutor] = None,
                  result_endpoints: Optional[Sequence[Any]] = None,
                  handoff_endpoints: Optional[Sequence[Any]] = None,
-                 profile: Optional[Any] = None):
+                 profile: Optional[Any] = None,
+                 drafter: Optional[Any] = None):
         endpoints = (list(handoff_endpoints)
                      if handoff_endpoints is not None
                      else [dict() for _ in range(max(1, scfg.handoff_shards))])
         super().__init__(cfg, params, scfg, policy, executor,
-                         result_endpoints, handoff_endpoints=endpoints)
+                         result_endpoints, handoff_endpoints=endpoints,
+                         drafter=drafter)
+        # The worker never decodes, so it never speculates — the draft
+        # plane is *hosted on the prefill endpoint* by accounting instead
+        # (see _draft_admit/_draft_propose below).
         pre_scfg = dataclasses.replace(
             scfg, max_batch=max(1, scfg.prefill_slots),
-            num_pages=scfg.prefill_pages)
+            num_pages=scfg.prefill_pages, speculative=False)
         self.prefill = PrefillWorker(cfg, params, pre_scfg, policy,
                                      executor=self.executor)
         n_params = sum(int(x.size) for x in jax.tree.leaves(params))
@@ -165,6 +170,27 @@ class DisaggregatedEngine(PagedEngine):
             self._route_cache.pop(req.rid, None)
         return tok0
 
+    # -- speculative drafting (hosted on the prefill endpoint) -----------------
+    # The drafter is latency-tolerant side work — exactly what the paper
+    # says to push to the secondary endpoint: its prefill-class forward
+    # passes run "on" the prefill endpoint, so their time bills to
+    # prefill_seconds, not to the decode endpoint's step budget.  In this
+    # in-process simulation the dispatch still happens on the loop thread;
+    # the accounting boundary is what disaggregates.
+
+    def _draft_admit(self, req: Request, slot: int) -> None:
+        t0 = time.perf_counter()
+        super()._draft_admit(req, slot)
+        with self._lock:
+            self.prefill_seconds += time.perf_counter() - t0
+
+    def _draft_propose(self, caps):
+        t0 = time.perf_counter()
+        drafts = super()._draft_propose(caps)
+        with self._lock:
+            self.prefill_seconds += time.perf_counter() - t0
+        return drafts
+
     # -- introspection / lifecycle ---------------------------------------------
     def stats(self) -> Dict[str, Any]:
         s = super().stats()
@@ -173,6 +199,7 @@ class DisaggregatedEngine(PagedEngine):
         s["prefill_endpoint"] = {
             "pool": self.prefill.pool.stats(),
             "busy_s": round(busy, 4),
+            "drafting": self._draft is not None,
         }
         return s
 

@@ -26,7 +26,7 @@ from __future__ import annotations
 import itertools
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,15 +36,17 @@ from repro.config.model import ModelConfig
 from repro.config.run import ServeConfig
 from repro.core.endpoint import ShardedStore
 from repro.core.executor import BackgroundExecutor
-from repro.models.transformer import ExecPolicy, init_decode_state
+from repro.models.transformer import (
+    ExecPolicy, init_decode_state, supports_paging)
 from repro.runtime.locks import make_lock, make_rlock
 from repro.serve import programs
 from repro.serve.backends import make_backend
 from repro.serve.kvpool import unpack_handoff
 from repro.serve.sampler import SamplingParams, sample
 from repro.serve.scheduler import (
-    hit_stop, needs_exact_prefill, normalize_stop, QueueFull, Request,
-    Scheduler, SlotTable)
+    hit_stop, hit_stop_at, needs_exact_prefill, normalize_stop, QueueFull,
+    Request, Scheduler, SlotTable)
+from repro.serve.speculative import build_draft_plane
 from repro.train.steps import make_decode_step, make_prefill_step
 
 
@@ -54,7 +56,8 @@ class ContinuousEngine:
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  policy: ExecPolicy = ExecPolicy(),
                  executor: Optional[BackgroundExecutor] = None,
-                 result_endpoints: Optional[Sequence[Any]] = None):
+                 result_endpoints: Optional[Sequence[Any]] = None,
+                 drafter: Optional[Tuple[ModelConfig, Any]] = None):
         self.cfg, self.scfg = cfg, scfg
         self.params = params
         self.policy = policy
@@ -74,6 +77,16 @@ class ContinuousEngine:
         }
         self._eos = np.full(B, -1, np.int32)
         self._host_temps = np.zeros(B, np.float32)
+        # Speculative plane (ServeConfig.speculative): the drafter's own
+        # device states + programs, and per-slot write ceilings (the last
+        # position a row may legitimately occupy; 0 for free slots) that the
+        # verify/propose programs clamp chunk positions to, so overshooting
+        # a budget scatters into the row's own never-read tail.
+        self._caps = np.zeros(B, np.int32)
+        if scfg.speculative:
+            self._check_speculative_target()
+        self._draft = (build_draft_plane(cfg, params, scfg, policy, drafter)
+                       if scfg.speculative else None)
         self._build_device_plane()
 
         # Sidecar plane (G2) + sharded result store (G3).
@@ -97,6 +110,10 @@ class ContinuousEngine:
         self._requests: Dict[int, Request] = {}        # guarded-by: _admission
         self._steps = 0                                # guarded-by: _lock
         self._tokens_out = 0                           # guarded-by: _lock
+        self._spec_steps = 0                           # guarded-by: _lock
+        self._spec_proposed = 0                        # guarded-by: _lock
+        self._spec_accepted = 0                        # guarded-by: _lock
+        self._cb_errors = 0                            # guarded-by: _lock
         # Set-once close latch: checked lock-free on the hot step path, set
         # under _admission so no submit() can slip past a closing engine.
         self._closed = threading.Event()
@@ -110,6 +127,19 @@ class ContinuousEngine:
         self._lifecycle = make_rlock("ContinuousEngine._lifecycle")
         self._admission = make_lock("ContinuousEngine._admission")
 
+    def _check_speculative_target(self) -> None:
+        """Dense-engine gate, checked before drafter resolution so the
+        caller hears about the unsupported *target* first.  The dense verify
+        relies on stale rejected entries being causally masked — only true
+        for global-attention rows.  Other archs speculate through the paged
+        engine's SnapshotBackend (all-or-nothing verify with an explicit
+        fallback state); ``PagedEngine`` overrides this as a no-op."""
+        if not supports_paging(self.cfg):
+            raise ValueError(
+                f"{self.cfg.arch_id}: dense speculative decode needs a "
+                "global-attention decoder-only arch; serve this config "
+                "with engine_mode='paged' (snapshot backend) instead")
+
     def _build_device_plane(self) -> None:
         """Fast path: two fixed-shape fused programs (admit retraces once per
         bucket length; decode is a single trace), shared process-wide through
@@ -120,6 +150,9 @@ class ContinuousEngine:
         self._admit_prog = programs.admit_program(
             cfg, self.policy, scfg.max_seq_len)
         self._decode_prog = programs.decode_program(cfg, self.policy)
+        if self._draft is not None:
+            self._verify_prog = programs.verify_program(
+                cfg, self.policy, scfg.draft_k)
         self.states = init_decode_state(cfg, scfg.max_batch,
                                         capacity=scfg.max_seq_len)
 
@@ -127,7 +160,13 @@ class ContinuousEngine:
     def submit(self, prompt, max_new_tokens: int,
                sampling: Optional[SamplingParams] = None,
                frontend_embeds: Optional[np.ndarray] = None,
-               stop=None) -> int:
+               stop=None,
+               on_token: Optional[Callable[[int], None]] = None) -> int:
+        """Enqueue a request; returns its rid.  ``on_token``, if given, is
+        called with each token id as it is committed (engine loop thread,
+        after stop/EOS/budget truncation — under speculative decoding an
+        accepted draft chunk streams in acceptance order).  A raising
+        callback is disabled after its first exception, never fatal."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim != 1 or prompt.size == 0:
             raise ValueError("prompt must be a non-empty 1-D token array")
@@ -143,7 +182,7 @@ class ContinuousEngine:
         req = Request(next(self._rid), prompt, max_new_tokens,
                       sampling or SamplingParams.from_config(self.scfg),
                       frontend_embeds=frontend_embeds,
-                      stop=normalize_stop(stop))
+                      stop=normalize_stop(stop), on_token=on_token)
         # Atomic against _fail_pending's teardown so a request can never
         # slip into the queue after close() already failed everything.
         with self._admission:
@@ -198,11 +237,15 @@ class ContinuousEngine:
             admitted += 1
             self._eos[slot] = sp.eos_id
             self._host_temps[slot] = sp.temperature
+            self._deliver(req, len(req.output) - 1)
             if (sp.eos_id >= 0 and tok0 == sp.eos_id) \
                     or req.max_new_tokens <= 1 \
                     or hit_stop(req.output, req.stop):
                 self._release_slot(slot)  # finished during admission
                 self._finish(req)
+            elif self._draft is not None:
+                self._caps[slot] = len(req.prompt) + req.max_new_tokens - 1
+                self._draft_admit(req, slot)
         return admitted
 
     def _admit_one(self, req: Request) -> Optional[int]:
@@ -230,8 +273,36 @@ class ContinuousEngine:
             jnp.asarray(slot, jnp.int32), self._key, self._mirrors)
         return int(tok[0])
 
+    def _deliver(self, req: Request, start: int) -> None:
+        """Stream ``req.output[start:]`` to the request's ``on_token``
+        callback.  Runs after truncation, so only committed tokens are ever
+        delivered; a raising callback is disabled, not fatal."""
+        cb = req.on_token
+        if cb is None:
+            return
+        try:
+            for t in req.output[start:]:
+                cb(int(t))
+        except Exception:
+            req.on_token = None
+            with self._lock:
+                self._cb_errors += 1
+
+    def _draft_admit(self, req: Request, slot: int) -> None:
+        """Prefill the admitted prompt into the drafter's state.  Subclasses
+        hosting the draft plane on another endpoint account its time there."""
+        self._draft.admit(slot, req.prompt,
+                          self.scheduler.bucket_for(len(req.prompt)))
+
+    def _draft_propose(self, caps: jax.Array) -> jax.Array:
+        """k greedy draft tokens per row, continuing the target's committed
+        mirrors (the drafter keeps no mirrors of its own)."""
+        return self._draft.propose(self._mirrors["tok"],
+                                   self._mirrors["pos"], caps)
+
     def _release_slot(self, slot: int) -> None:
         self.slots.release(slot)
+        self._caps[slot] = 0
         # Zero the freed slot's device temperature so an all-greedy batch
         # regains the cheap argmax sampling path (a stale temp > 0 would
         # force the stochastic branch on every later step).
@@ -248,6 +319,8 @@ class ContinuousEngine:
 
     def _decode_once(self) -> bool:
         """One batched decode step over all slots + per-slot evictions."""
+        if self._draft is not None:
+            return self._decode_spec_once()
         active = self.slots.active()
         if not active:
             return False
@@ -258,6 +331,7 @@ class ContinuousEngine:
             req.output.append(tok)
             with self._lock:
                 self._tokens_out += 1
+            self._deliver(req, len(req.output) - 1)
             if (self._eos[slot] >= 0 and tok == self._eos[slot]) \
                     or len(req.output) >= req.max_new_tokens \
                     or hit_stop(req.output, req.stop):
@@ -265,13 +339,74 @@ class ContinuousEngine:
                 # in the output (callers strip them if they want clean text).
                 self._release_slot(slot)
                 self._finish(req)
+        self._after_step()
+        return True
+
+    def _verify_device(self, drafts: jax.Array, caps: jax.Array):
+        """Run the fused verify program; returns the host (B, k+1) emitted
+        chunk and (B,) accept lengths."""
+        self.states, out, acc, self._key, self._mirrors = self._verify_prog(
+            self.params, self.states, self._key, self._mirrors, drafts, caps)
+        return np.asarray(out), np.asarray(acc)
+
+    def _decode_spec_once(self) -> bool:
+        """One speculative macro step: the drafter proposes k tokens per
+        slot, the target verifies all k+1 positions in one batched forward,
+        and each slot commits its accepted prefix — with the same per-token
+        termination semantics as sequential decode (EOS, token budget, or a
+        stop sequence completing *inside* the chunk truncate mid-chunk, at
+        the earliest trigger)."""
+        active = self.slots.active()
+        if not active:
+            return False
+        k = self._draft.k
+        caps = jnp.asarray(self._caps)
+        drafts = self._draft_propose(caps)
+        out, acc = self._verify_device(drafts, caps)
+        committed = proposed = accepted = 0
+        for req in active:
+            slot = req.slot
+            m = int(acc[slot])
+            if self._host_temps[slot] <= 0.0:   # only greedy rows speculate
+                proposed += k
+                accepted += m
+            start = len(req.output)
+            req.output.extend(int(out[slot, j]) for j in range(m + 1))
+            cut = None                    # terminal output length, if any
+            eos = int(self._eos[slot])
+            if eos >= 0:
+                for j in range(m + 1):
+                    if int(out[slot, j]) == eos:
+                        cut = start + j + 1
+                        break
+            if len(req.output) >= req.max_new_tokens:
+                cut = (req.max_new_tokens if cut is None
+                       else min(cut, req.max_new_tokens))
+            scut = hit_stop_at(req.output, req.stop, start + 1)
+            if scut is not None and (cut is None or scut < cut):
+                cut = scut
+            if cut is not None:
+                del req.output[cut:]
+            committed += len(req.output) - start
+            self._deliver(req, start)
+            if cut is not None:
+                self._release_slot(slot)
+                self._finish(req)
+        with self._lock:
+            self._tokens_out += committed
+            self._spec_steps += 1
+            self._spec_proposed += proposed
+            self._spec_accepted += accepted
+        self._after_step()
+        return True
+
+    def _after_step(self) -> None:
         with self._lock:
             self._steps += 1
             steps = self._steps
         if self.scfg.stats_every and steps % self.scfg.stats_every == 0:
             snap = self.stats()
             self.executor.submit("serve.stats", self._append_stats, snap)
-        return True
 
     def _append_stats(self, snap: Dict[str, Any]) -> None:
         with self._lock:
@@ -360,7 +495,11 @@ class ContinuousEngine:
         ``close()`` and decode-loop death write error records for every
         pending request, so this returns a payload with an ``"error"`` key
         instead of hanging the waiter; a decode-loop exception re-raises
-        here with the original as cause."""
+        here with the original as cause.
+
+        Callers that passed ``on_token`` to :meth:`submit` have already
+        streamed these tokens; the payload's ``"tokens"`` list is the
+        authoritative record (same ids, same order, post-truncation)."""
         if wait and not self.executor.drain():
             raise TimeoutError(
                 f"sidecar drain timed out before req/{rid} was recorded")
@@ -387,7 +526,10 @@ class ContinuousEngine:
         # the lock so a concurrent reader never sees a torn update.
         with self._lock:
             steps, tokens = self._steps, self._tokens_out
-        return {
+            cb_errors = self._cb_errors
+            spec = (self._spec_steps, self._spec_proposed,
+                    self._spec_accepted)
+        s = {
             "steps": steps,
             "tokens_out": tokens,
             "active": len(self.slots.active()),
@@ -395,6 +537,31 @@ class ContinuousEngine:
             "free_slots": self.slots.free_count(),
             "result_shards": self._shard_balance,
         }
+        if cb_errors:
+            s["callback_errors"] = cb_errors
+        if self._draft is not None:
+            msteps, prop, acc = spec
+            s["speculative"] = {
+                "draft_k": self._draft.k,
+                "macro_steps": msteps,
+                "proposed": prop,
+                "accepted": acc,
+                "acceptance_rate": (acc / prop) if prop else 0.0,
+            }
+        return s
+
+    def spec_boost(self) -> float:
+        """Expected committed tokens per device macro step relative to
+        sequential decode — 1 + k * acceptance_rate for greedy traffic, 1.0
+        until enough chunks have been measured.  The cluster cost model
+        scales a replica's queue-drain estimate by this."""
+        if self._draft is None:
+            return 1.0
+        with self._lock:
+            prop, acc = self._spec_proposed, self._spec_accepted
+        if prop < self._draft.k * 8:       # too few chunks to trust yet
+            return 1.0
+        return 1.0 + self._draft.k * (acc / prop)
 
     def cache_bytes(self) -> int:
         """Resident KV-cache bytes (dense per-slot buffers or paged pools) —
@@ -488,7 +655,8 @@ class PagedEngine(ContinuousEngine):
                  executor: Optional[BackgroundExecutor] = None,
                  result_endpoints: Optional[Sequence[Any]] = None,
                  handoff_endpoints: Optional[Sequence[Any]] = None,
-                 handoff_ns: str = ""):
+                 handoff_ns: str = "",
+                 drafter: Optional[Tuple[ModelConfig, Any]] = None):
         self.backend = make_backend(cfg, scfg)  # validates page geometry
         self.page_size = scfg.page_size
         # Handoff-import plane (disaggregated / cluster serving).  The
@@ -505,7 +673,13 @@ class PagedEngine(ContinuousEngine):
         self._deferred_imports = 0            # guarded-by: _lock
         self._handoff_bytes = 0               # guarded-by: _lock
         super().__init__(cfg, params, scfg, policy, executor,
-                         result_endpoints)
+                         result_endpoints, drafter=drafter)
+
+    def _check_speculative_target(self) -> None:
+        # Every arch speculates here: the backend layer supplies rollback
+        # (write-position bookkeeping for paged KV, all-or-nothing state
+        # select for snapshots).
+        return None
 
     def _build_device_plane(self) -> None:
         # The backend owns the fused programs and the decode-state layout;
@@ -567,6 +741,11 @@ class PagedEngine(ContinuousEngine):
     # -- decode / release ------------------------------------------------------
     def _decode_device(self) -> np.ndarray:
         return self.backend.decode_step()
+
+    def _verify_device(self, drafts: jax.Array, caps: jax.Array):
+        # The backend owns the verify program: block-table scatter for the
+        # paged pool, all-or-nothing state select for snapshot archs.
+        return self.backend.verify_step(drafts, caps)
 
     def _release_slot(self, slot: int) -> None:
         self.backend.release(self.slots.get(slot), slot)

@@ -12,7 +12,7 @@ archs, the snapshot pool for recurrent/SWA/enc-dec archs).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Union
+from typing import Any, Optional, Sequence, Tuple, Union
 
 from repro.config.model import ModelConfig
 from repro.config.run import EngineMode, ServeConfig
@@ -37,20 +37,30 @@ EngineLike = Union[ContinuousEngine, FixedBatchEngine, ServeCluster]
 def make_engine(cfg: ModelConfig, params, scfg: ServeConfig,
                 policy: ExecPolicy = ExecPolicy(),
                 tenants: Optional[Sequence[TenantSpec]] = None,
-                profile: Optional[Any] = None) -> EngineLike:
+                profile: Optional[Any] = None,
+                drafter: Optional[Tuple[ModelConfig, Any]] = None
+                ) -> EngineLike:
     """Build the serve engine ``scfg`` asks for.
 
     ``tenants`` and ``profile`` only apply to the modes that use them
-    (cluster QoS; disaggregated/cluster routing cost model)."""
+    (cluster QoS; disaggregated/cluster routing cost model).  ``drafter``
+    overrides ``scfg.draft_model`` with an explicit (config, params) pair
+    when ``scfg.speculative`` is set — speculation is orthogonal to the
+    engine mode except for the fixed-batch baseline, which has no
+    per-slot admission plane to roll back into."""
     mode = resolve_engine_mode(scfg)
     if mode == EngineMode.FIXED:
+        if scfg.speculative:
+            raise ValueError(
+                "engine_mode='fixed' cannot speculate: the fixed-batch "
+                "baseline has no slot-level rollback; use continuous/paged")
         return FixedBatchEngine(cfg, params, scfg, policy)
     if mode == EngineMode.CONTINUOUS:
-        return ContinuousEngine(cfg, params, scfg, policy)
+        return ContinuousEngine(cfg, params, scfg, policy, drafter=drafter)
     if mode == EngineMode.PAGED:
-        return PagedEngine(cfg, params, scfg, policy)
+        return PagedEngine(cfg, params, scfg, policy, drafter=drafter)
     if mode == EngineMode.DISAGGREGATED:
         return DisaggregatedEngine(cfg, params, scfg, policy,
-                                   profile=profile)
+                                   profile=profile, drafter=drafter)
     return ServeCluster(cfg, params, scfg, policy, tenants=tenants,
-                        profile=profile)
+                        profile=profile, drafter=drafter)

@@ -16,15 +16,18 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.config.model import ModelConfig
 from repro.models.transformer import (
     ExecPolicy, init_decode_state, insert_decode_slot, read_decode_slot,
-    read_page, read_pages, scatter_solo_pages, write_page)
+    read_page, read_pages, scatter_solo_pages, select_decode_rows,
+    write_page)
 from repro.serve.sampler import sample_slots
 from repro.train.steps import (
     make_bucket_prefill_step, make_decode_step, make_paged_decode_step,
-    make_paged_prefill_step, make_resume_prefill_step)
+    make_paged_prefill_step, make_resume_prefill_step, make_verify_step,
+    make_paged_verify_step)
 
 
 def _make_admit_program(cfg: ModelConfig, policy: ExecPolicy, capacity: int):
@@ -140,6 +143,160 @@ def _make_paged_decode_program(cfg: ModelConfig, policy: ExecPolicy):
     return step
 
 
+# -- speculative decoding programs --------------------------------------------
+#
+# One macro step per k-token draft chunk: the drafter proposes k tokens
+# (``draft_propose_program``), the target scores all k+1 positions in one
+# batched forward (``verify_program`` family), the device computes the
+# accepted greedy prefix per row and advances the mirrors by it.  Greedy
+# acceptance is ``jnp.argmax`` — the same op ``sample_slots`` uses for
+# ``temperature <= 0`` rows — so accepted chunks are bit-identical to
+# sequential decode.  Stochastic rows never speculate: their accept length
+# is forced to 0 and their emitted token comes from ``sample_slots`` over
+# the chunk's first logits (a normal decode step's logits).
+#
+# ``caps`` is the per-row write ceiling (last position the row may ever
+# legitimately occupy, 0 for free slots): chunk positions are clamped to it,
+# so overshooting a row's token budget scatters into a never-read entry of
+# its own allocation instead of a neighbour's.
+
+def _chunk_inputs(mirrors, drafts, caps, k: int):
+    tokens = jnp.concatenate([mirrors["tok"][:, None], drafts], axis=1)
+    raw = mirrors["pos"][:, None] + jnp.arange(k + 1, dtype=jnp.int32)[None]
+    return tokens, jnp.minimum(raw, caps[:, None])
+
+
+def _accept(logits, drafts, key, mirrors):
+    """Greedy-prefix acceptance: emitted chunk (B, k+1), accept lengths
+    (B,) in [0, k], new key."""
+    g = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (B, k+1)
+    first, key = sample_slots(logits[:, 0], key, mirrors["temp"],
+                              mirrors["top_k"], mirrors["top_p"])
+    out = jnp.concatenate([first[:, None], g[:, 1:]], axis=1)
+    greedy = mirrors["temp"] <= 0.0
+    match = (drafts == g[:, :-1]) & greedy[:, None]
+    acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    return out, acc, key
+
+
+def _advance(mirrors, out, acc):
+    rows = jnp.arange(out.shape[0])
+    return dict(mirrors, tok=out[rows, acc], pos=mirrors["pos"] + acc + 1)
+
+
+def _fix_state_pos(states, mirrors):
+    """``forward`` stamps the batch-global ``states["pos"]`` scalar from row
+    0's last *fed* position — for a verify chunk that is ``pre + k + 1``
+    even when row 0 rolled its chunk back.  Restore the sequential-decode
+    convention (``states["pos"] == mirrors["pos"][0]`` after the step) so a
+    speculative engine's state tree stays bit-identical to a sequential
+    engine's."""
+    return dict(states, pos=mirrors["pos"][0].astype(jnp.int32))
+
+
+def _make_verify_program(cfg: ModelConfig, policy: ExecPolicy, k: int):
+    """Dense-cache speculative verify (global-attention archs): write all
+    k+1 entries, attend, accept the matching greedy prefix.  Rejected
+    entries stay in the cache as stale rows — causally masked for every
+    query at or below the rolled-back position, and rewritten by the next
+    chunk before anything attends past them."""
+    verify = make_verify_step(cfg, policy)
+
+    def step(params, states, key, mirrors, drafts, caps):
+        tokens, positions = _chunk_inputs(mirrors, drafts, caps, k)
+        states, logits = verify(params, states,
+                                {"tokens": tokens, "positions": positions})
+        out, acc, key = _accept(logits, drafts, key, mirrors)
+        mirrors = _advance(mirrors, out, acc)
+        return _fix_state_pos(states, mirrors), out, acc, key, mirrors
+    return step
+
+
+def _make_paged_verify_program(cfg: ModelConfig, policy: ExecPolicy, k: int):
+    """Block-table speculative verify: the chunk scatters into each row's
+    own pages (pages are allocated for the full decode horizon at admission,
+    so clamped overshoot lands in the row's last page's unused tail)."""
+    verify = make_paged_verify_step(cfg, policy)
+
+    def step(params, pstate, key, mirrors, table, drafts, caps):
+        tokens, positions = _chunk_inputs(mirrors, drafts, caps, k)
+        pstate, logits = verify(
+            params, pstate, {"tokens": tokens, "positions": positions},
+            table)
+        out, acc, key = _accept(logits, drafts, key, mirrors)
+        mirrors = _advance(mirrors, out, acc)
+        return _fix_state_pos(pstate, mirrors), out, acc, key, mirrors
+    return step
+
+
+def _make_snapshot_verify_program(cfg: ModelConfig, policy: ExecPolicy,
+                                  k: int):
+    """All-or-nothing speculative verify for snapshot archs (recurrent /
+    SWA / enc-dec): their per-slot state folds every consumed token in
+    irreversibly, so partial chunks cannot be rolled back entry-wise.
+    Instead the program runs the chunk forward *and* a plain single-token
+    decode from the same pre-verify state (neither donates it), then
+    selects per row: fully-matching rows commit the multi-token state and
+    emit k+1 tokens, any mismatch falls back to the single-step state and
+    emits exactly the token a non-speculative step would have — never a
+    livelock, always exact."""
+    verify = make_verify_step(cfg, policy)
+    decode = make_decode_step(cfg, policy)
+
+    def step(params, states, key, mirrors, drafts, caps):
+        tokens, positions = _chunk_inputs(mirrors, drafts, caps, k)
+        full_states, logits = verify(
+            params, states, {"tokens": tokens, "positions": positions})
+        one_states, _ = decode(
+            params, states, {"tokens": mirrors["tok"][:, None],
+                             "positions": mirrors["pos"][:, None]})
+        out, acc, key = _accept(logits, drafts, key, mirrors)
+        full = acc >= k                                     # (B,) bool
+        acc = jnp.where(full, k, 0).astype(jnp.int32)
+        states = select_decode_rows(full, full_states, one_states)
+        mirrors = _advance(mirrors, out, acc)
+        return _fix_state_pos(states, mirrors), out, acc, key, mirrors
+    return step
+
+
+def _make_draft_admit_program(cfg: ModelConfig, policy: ExecPolicy,
+                              capacity: int):
+    """Drafter admission: bucket-prefill the prompt into the drafter's own
+    dense state at ``slot``.  No sampling — the drafter's first proposal
+    comes from the propose scan, fed the target's committed token."""
+    prefill = make_bucket_prefill_step(cfg, policy)
+
+    def admit(params, states, batch, slot):
+        solo = init_decode_state(cfg, 1, capacity)
+        solo, _ = prefill(params, solo, batch)
+        return insert_decode_slot(states, solo, slot)
+    return admit
+
+
+def _make_draft_propose_program(cfg: ModelConfig, policy: ExecPolicy,
+                                k: int):
+    """Greedy drafter scan: k+1 iterations so the drafter's cache covers
+    every position the *next* chunk's context needs (iteration i feeds the
+    chunk's i-th token and writes its KV; the extra final iteration writes
+    the last draft's entry, its output is discarded).  Drafter rollback is
+    free: rejected entries are causally masked, then rewritten."""
+    decode = make_decode_step(cfg, policy)
+
+    def propose(params, states, tok, pos, caps):
+        def body(carry, i):
+            states, t = carry
+            batch = {"tokens": t[:, None],
+                     "positions": jnp.minimum(pos + i, caps)[:, None]}
+            states, logits = decode(params, states, batch)
+            nt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (states, nt), nt
+
+        (states, _), outs = jax.lax.scan(
+            body, (states, tok), jnp.arange(k + 1, dtype=jnp.int32))
+        return states, outs[:k].T                           # (B, k) proposals
+    return propose
+
+
 # -- process-wide compiled-program cache --------------------------------------
 # Keys are frozen dataclasses (ModelConfig, ExecPolicy) plus ints, so equal
 # configs share one jitted callable and its trace cache across engines.
@@ -204,3 +361,35 @@ def insert_slot_program():
 @functools.lru_cache(maxsize=None)
 def write_page_program():
     return jax.jit(write_page, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def verify_program(cfg: ModelConfig, policy: ExecPolicy, k: int):
+    return jax.jit(_make_verify_program(cfg, policy, k),
+                   donate_argnums=(1, 3))
+
+
+@functools.lru_cache(maxsize=None)
+def paged_verify_program(cfg: ModelConfig, policy: ExecPolicy, k: int):
+    return jax.jit(_make_paged_verify_program(cfg, policy, k),
+                   donate_argnums=(1, 3))
+
+
+@functools.lru_cache(maxsize=None)
+def snapshot_verify_program(cfg: ModelConfig, policy: ExecPolicy, k: int):
+    """The pre-verify state is read twice (chunk + single-step fallback)
+    and must survive until the row select commits — so it is NOT donated."""
+    return jax.jit(_make_snapshot_verify_program(cfg, policy, k),
+                   donate_argnums=(3,))
+
+
+@functools.lru_cache(maxsize=None)
+def draft_admit_program(cfg: ModelConfig, policy: ExecPolicy, capacity: int):
+    return jax.jit(_make_draft_admit_program(cfg, policy, capacity),
+                   donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def draft_propose_program(cfg: ModelConfig, policy: ExecPolicy, k: int):
+    return jax.jit(_make_draft_propose_program(cfg, policy, k),
+                   donate_argnums=(1,))

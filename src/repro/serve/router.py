@@ -57,7 +57,8 @@ class ClusterRouter:
                 max_slots=rep.scfg.max_batch,
                 free_pages=rep.backend.available_units(),
                 hit_pages=hit_units,
-                hit_tokens=hit_tokens))
+                hit_tokens=hit_tokens,
+                spec_boost=rep.spec_boost()))
         return out
 
     def pick(self, crid: int, prompt: np.ndarray, max_new_tokens: int,

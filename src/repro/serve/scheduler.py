@@ -10,7 +10,7 @@ import dataclasses
 import heapq
 import time
 from collections import deque
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -48,16 +48,36 @@ def normalize_stop(stop: StopSpec) -> Tuple[Tuple[int, ...], ...]:
     return tuple(seqs)
 
 
+def hit_stop_at(output: Sequence[int], stop: Tuple[Tuple[int, ...], ...],
+                new_from: int = 0) -> Optional[int]:
+    """Index one past the end of the *earliest* stop sequence completing at
+    or after ``new_from``, or None.
+
+    ``new_from`` is the output length before the newest tokens landed, plus
+    one — i.e. the smallest end index a not-yet-seen stop could have.  With
+    one token per step that reduces to the old ends-the-output suffix check;
+    with a multi-token speculative accept the scan catches a stop sequence
+    completing *inside* the chunk (including one whose head was emitted in
+    earlier steps and whose tail spans the accept boundary), so the caller
+    can truncate mid-chunk instead of over-generating to the chunk edge."""
+    best = None
+    for seq in stop:
+        n = len(seq)
+        if not n:
+            continue
+        for e in range(max(n, new_from), len(output) + 1):
+            if tuple(output[e - n:e]) == seq:
+                best = e if best is None else min(best, e)
+                break
+    return best
+
+
 def hit_stop(output: Sequence[int],
              stop: Tuple[Tuple[int, ...], ...]) -> bool:
     """Whether the generated output ends with any stop sequence.  Host-side
-    suffix check after each decode step — token-id sequences only (string
+    check after a single-token decode step — token-id sequences only (string
     matching would need the tokenizer on the serve plane)."""
-    for seq in stop:
-        n = len(seq)
-        if n and len(output) >= n and tuple(output[-n:]) == seq:
-            return True
-    return False
+    return hit_stop_at(output, stop, len(output)) is not None
 
 
 @dataclasses.dataclass
@@ -75,6 +95,10 @@ class Request:
     pages: List[int] = dataclasses.field(default_factory=list)  # paged backend
     prefix_hit_tokens: int = 0
     stop: Tuple[Tuple[int, ...], ...] = ()   # normalized stop sequences
+    # Streaming: called with each token id as it is committed (host-side,
+    # engine loop thread, after stop/EOS/budget truncation).  Disabled on
+    # the first exception it raises.
+    on_token: Optional[Callable[[int], None]] = None
 
     @property
     def done(self) -> bool:

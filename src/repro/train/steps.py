@@ -244,3 +244,34 @@ def make_paged_decode_step(cfg: ModelConfig,
             policy=policy, states=pstate, page_table=table)
         return new_states, logits[:, -1]
     return decode_step
+
+
+def make_verify_step(cfg: ModelConfig, policy: ExecPolicy = ExecPolicy()):
+    """Speculative verify against the dense per-slot cache: score every
+    position of a (B, k+1) chunk — one committed token plus k drafts — in a
+    single target forward.  Unlike the decode step, the *full* (B, k+1, V)
+    logits come back: the caller compares the target's greedy choices
+    against the drafts to find the accepted prefix.  The cache writes for
+    all k+1 positions happen inside the forward (write-then-attend), so
+    rejected entries are simply stale — causally invisible to any query at
+    or below the rolled-back position, and overwritten by the next chunk."""
+    def verify_step(params, states, batch):
+        logits, new_states, _ = forward(
+            params, cfg, batch["tokens"], batch.get("positions"),
+            policy=policy, states=states)
+        return new_states, logits
+    return verify_step
+
+
+def make_paged_verify_step(cfg: ModelConfig,
+                           policy: ExecPolicy = ExecPolicy()):
+    """Speculative verify through the block table: the (B, k+1) chunk's K/V
+    scatter into each row's own pages (``paged_cache_write`` handles chunks
+    straddling page boundaries) and all k+1 logits come back for host-side
+    acceptance.  Same stale-entry discipline as :func:`make_verify_step`."""
+    def verify_step(params, pstate, batch, table):
+        logits, new_states, _ = forward(
+            params, cfg, batch["tokens"], batch.get("positions"),
+            policy=policy, states=pstate, page_table=table)
+        return new_states, logits
+    return verify_step

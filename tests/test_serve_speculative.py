@@ -1,0 +1,483 @@
+"""Speculative decoding: multi-token cache writes, verify-and-rollback
+exactness across backends, stop sequences inside accepted chunks, token
+streaming callbacks, drafter resolution, and acceptance-rate routing.
+Tier-1."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ServeConfig, TrainConfig, get_config
+from repro.core.characterize import SidecarProfile
+from repro.core.costmodel import CostModel, ReplicaSignals
+from repro.models.attention import (
+    cache_write, init_cache, init_paged_cache, paged_cache_write)
+from repro.models.transformer import init_params
+from repro.serve import (
+    ContinuousEngine, PagedEngine, ServeCluster, build_draft_plane,
+    make_engine)
+from repro.serve.backends import SnapshotBackend
+from repro.serve.sampler import SamplingParams
+from repro.serve.scheduler import hit_stop, hit_stop_at, normalize_stop
+from repro.serve.speculative import (
+    make_draft_config, quantize_draft_params, resolve_drafter,
+    slice_draft_params)
+from repro.train.steps import init_train_state
+
+
+# ----------------------------------------------------------------------------
+# fixtures: a refinement-regime target (deep layers damped) so the layer-skip
+# drafter actually gets chunks accepted, plus plain engines for exactness refs
+# ----------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def damped_parts():
+    """4-layer repro-tiny with layers 1..3 output-damped: the ``self:1``
+    drafter agrees with the target on most greedy steps, so accepted chunks
+    (and mid-chunk stops/EOS) actually occur in the tests below."""
+    cfg = dataclasses.replace(get_config("repro-tiny"), num_layers=4)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def damp(path, leaf):
+        if path[-1].key == "wo":
+            return leaf.at[1:].multiply(0.005)
+        return leaf
+
+    params["layers"] = jax.tree_util.tree_map_with_path(
+        damp, params["layers"])
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def tiny_parts():
+    cfg = get_config("repro-tiny")
+    state = init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
+    return cfg, state["params"]
+
+
+@pytest.fixture(scope="module")
+def rwkv_parts():
+    cfg = get_config("rwkv6-3b").reduced()
+    state = init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
+    return cfg, state["params"]
+
+
+def _scfg(**kw):
+    defaults = dict(max_batch=2, max_seq_len=96, prefill_buckets=(8, 16),
+                    page_size=8)
+    defaults.update(kw)
+    return ServeConfig(**defaults)
+
+
+def _spec_scfg(**kw):
+    kw.setdefault("speculative", True)
+    kw.setdefault("draft_k", 3)
+    kw.setdefault("draft_model", "self:1")
+    return _scfg(**kw)
+
+
+def _prompt(rng, cfg, n):
+    return rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+
+
+def _outputs(eng, prompts, news, **submit_kw):
+    rids = [eng.submit(p, n, **submit_kw) for p, n in zip(prompts, news)]
+    eng.run()
+    return [eng.request(r).output for r in rids]
+
+
+# ----------------------------------------------------------------------------
+# hit_stop_at: stop sequences completing inside an accepted draft chunk
+# ----------------------------------------------------------------------------
+
+def test_hit_stop_at_units():
+    stop = normalize_stop([[2, 3], [5]])
+    # earliest completion across patterns, index one past the match
+    assert hit_stop_at([1, 2, 3, 5], stop) == 3
+    assert hit_stop_at([5, 2, 3], stop) == 1
+    assert hit_stop_at([1, 4, 4], stop) is None
+    assert hit_stop_at([], stop) is None
+    # new_from: a match completing before the window is invisible...
+    assert hit_stop_at([1, 2, 3, 4, 4], stop, new_from=4) is None
+    # ...but one *spanning* the boundary (starts before, ends inside) hits
+    assert hit_stop_at([1, 2, 3], stop, new_from=3) == 3
+    # hit_stop keeps its suffix-only semantics
+    assert hit_stop([1, 2, 3], stop)
+    assert not hit_stop([2, 3, 1], stop)
+
+
+def test_hit_stop_at_inside_chunk_semantics():
+    """The engine scans each committed chunk with ``new_from = start + 1``:
+    a stop completing at any token of the chunk — including one spanning
+    the pre-chunk/chunk boundary — truncates mid-chunk."""
+    # output before the macro step: [7, 1]; chunk commits [9, 4, 6]
+    out = [7, 1, 9, 4, 6]
+    start = 2
+    assert hit_stop_at(out, normalize_stop([[9, 4]]), start + 1) == 4
+    assert hit_stop_at(out, normalize_stop([[1, 9]]), start + 1) == 3  # spans
+    assert hit_stop_at(out, normalize_stop([[7, 1]]), start + 1) is None
+
+
+# ----------------------------------------------------------------------------
+# multi-token cache writes: one S=k+1 scatter == k+1 single-token writes
+# ----------------------------------------------------------------------------
+
+def test_dense_cache_write_chunk_matches_sequential(tiny_parts):
+    cfg, _ = tiny_parts
+    rng = np.random.default_rng(0)
+    B, S, C = 3, 4, 16
+    j, n = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.asarray(rng.standard_normal((B, S, j, n)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, j, n)), jnp.float32)
+    # per-row absolute positions (continuous batching: rows differ)
+    base = jnp.asarray([[2], [7], [11]], jnp.int32)
+    positions = base + jnp.arange(S, dtype=jnp.int32)[None, :]
+    chunk = cache_write(init_cache(cfg, B, C, jnp.float32), k, v, positions)
+    seq = init_cache(cfg, B, C, jnp.float32)
+    for s in range(S):
+        seq = cache_write(seq, k[:, s:s + 1], v[:, s:s + 1],
+                          positions[:, s:s + 1])
+    for leaf in ("k", "v", "pos"):
+        np.testing.assert_array_equal(np.asarray(chunk[leaf]),
+                                      np.asarray(seq[leaf]))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_cache_write_chunk_matches_sequential(tiny_parts, dtype):
+    cfg, _ = tiny_parts
+    rng = np.random.default_rng(1)
+    B, S, page, P = 2, 4, 4, 7
+    j, n = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.asarray(rng.standard_normal((B, S, j, n)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, j, n)), dtype)
+    # row 0's chunk straddles the page-2/page-3 boundary; row 1 starts a page
+    base = jnp.asarray([[6], [8]], jnp.int32)
+    positions = base + jnp.arange(S, dtype=jnp.int32)[None, :]
+    table = jnp.asarray([[1, 2, 3, 0], [4, 5, 6, 0]], jnp.int32)
+    chunk = paged_cache_write(
+        init_paged_cache(cfg, P, page, dtype), k, v, positions, table)
+    seq = init_paged_cache(cfg, P, page, dtype)
+    for s in range(S):
+        seq = paged_cache_write(seq, k[:, s:s + 1], v[:, s:s + 1],
+                                positions[:, s:s + 1], table)
+    for leaf in chunk:
+        np.testing.assert_array_equal(np.asarray(chunk[leaf]),
+                                      np.asarray(seq[leaf]))
+
+
+def test_paged_cache_write_int8_recuts_scales_on_overwrite(tiny_parts):
+    """Quantized pools: a chunk write quantizes per entry exactly like k+1
+    single writes, and overwriting a rolled-back suffix re-cuts the scales —
+    the pool ends bit-identical to one that never saw the rejected values."""
+    cfg, _ = tiny_parts
+    rng = np.random.default_rng(2)
+    B, S, page, P = 2, 3, 4, 5
+    j, n = cfg.num_kv_heads, cfg.head_dim
+    table = jnp.asarray([[1, 2, 0], [3, 4, 0]], jnp.int32)
+    positions = jnp.asarray([[3], [5]], jnp.int32) + \
+        jnp.arange(S, dtype=jnp.int32)[None, :]
+    big = jnp.asarray(100.0 * rng.standard_normal((B, S, j, n)), jnp.float32)
+    small = jnp.asarray(rng.standard_normal((B, S, j, n)), jnp.float32)
+
+    chunk = paged_cache_write(
+        init_paged_cache(cfg, P, page, jnp.float32, "int8"),
+        small, small, positions, table)
+    seq = init_paged_cache(cfg, P, page, jnp.float32, "int8")
+    for s in range(S):
+        seq = paged_cache_write(seq, small[:, s:s + 1], small[:, s:s + 1],
+                                positions[:, s:s + 1], table)
+    for leaf in ("kp", "vp", "ksc", "vsc"):
+        np.testing.assert_array_equal(np.asarray(chunk[leaf]),
+                                      np.asarray(seq[leaf]))
+
+    # rollback-rewrite: big rejected draft entries, then the real tokens
+    rolled = paged_cache_write(
+        init_paged_cache(cfg, P, page, jnp.float32, "int8"),
+        big, big, positions, table)
+    assert np.max(np.asarray(rolled["ksc"])) > np.max(np.asarray(
+        chunk["ksc"]))                      # scales really were cut larger
+    rewritten = paged_cache_write(rolled, small, small, positions, table)
+    for leaf in ("kp", "vp", "ksc", "vsc"):
+        np.testing.assert_array_equal(np.asarray(rewritten[leaf]),
+                                      np.asarray(chunk[leaf]))
+
+
+# ----------------------------------------------------------------------------
+# verify-and-rollback exactness: every backend, vs its sequential engine
+# ----------------------------------------------------------------------------
+
+def test_speculative_exact_continuous_dense(damped_parts):
+    cfg, params = damped_parts
+    rng = np.random.default_rng(3)
+    prompts = [_prompt(rng, cfg, n) for n in (5, 11, 8)]
+    news = [9, 6, 12]
+    ref = ContinuousEngine(cfg, params, _scfg(max_batch=3))
+    spec = ContinuousEngine(cfg, params, _spec_scfg(max_batch=3))
+    r = _outputs(ref, prompts, news)
+    s = _outputs(spec, prompts, news)
+    assert s == r
+    st = spec.stats()["speculative"]
+    assert st["accepted"] > 0          # drafter earned mid-chunk commits
+    assert st["macro_steps"] < sum(len(o) - 1 for o in s)
+    ref.close()
+    spec.close()
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "int8"])
+def test_speculative_exact_paged(damped_parts, kv_quant):
+    """Paged backend (f32 and int8 pools): speculative output bit-matches
+    the same pool's sequential decode, and rolled-back tokens are counted.
+    int8 rollback depends on overwrite re-cutting per-entry scales — a
+    stale big scale would flip later argmaxes and break this exactness."""
+    cfg, params = damped_parts
+    rng = np.random.default_rng(4)
+    prompts = [_prompt(rng, cfg, n) for n in (6, 10)]
+    news = [10, 8]
+    ref = PagedEngine(cfg, params, _scfg(kv_quant=kv_quant))
+    spec = PagedEngine(cfg, params, _spec_scfg(kv_quant=kv_quant))
+    r = _outputs(ref, prompts, news)
+    s = _outputs(spec, prompts, news)
+    assert s == r
+    st = spec.stats()
+    sp = st["speculative"]
+    assert sp["proposed"] == sp["accepted"] + st["spec_rolled_back_tokens"]
+    ref.close()
+    spec.close()
+
+
+def test_speculative_exact_snapshot_and_rollback_restores_state(rwkv_parts,
+                                                                tiny_parts):
+    """SnapshotBackend: all-or-nothing verify.  With an adversarial (random
+    cross-model) drafter nothing is ever accepted, so every macro step takes
+    the rollback path — outputs AND the resident decode state must match a
+    sequential engine's bit-for-bit."""
+    cfg, params = rwkv_parts
+    tcfg, _ = tiny_parts
+    dcfg = dataclasses.replace(tcfg, vocab_size=cfg.vocab_size)
+    drafter = (dcfg, init_params(jax.random.PRNGKey(7), dcfg))
+    rng = np.random.default_rng(5)
+    prompt = _prompt(rng, cfg, 7)
+
+    ref = PagedEngine(cfg, params, _scfg(max_batch=1))
+    spec = PagedEngine(cfg, params, _spec_scfg(max_batch=1),
+                       drafter=drafter)
+    assert isinstance(spec.backend, SnapshotBackend)
+    r = _outputs(ref, [prompt], [6])
+    s = _outputs(spec, [prompt], [6])
+    assert s == r
+    # the rejected chunks' state advances were rolled back: the engines'
+    # resident decode states (single slot, same request) are identical
+    for a, b in zip(jax.tree.leaves(ref.states),
+                    jax.tree.leaves(spec.states)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    sp = spec.stats()["speculative"]
+    assert sp["accepted"] == 0 and sp["proposed"] > 0
+    assert spec.stats()["spec_rolled_back_tokens"] == sp["proposed"]
+    ref.close()
+    spec.close()
+
+
+def test_stop_eos_budget_inside_accepted_chunk(damped_parts):
+    """Terminal conditions landing *inside* an accepted chunk truncate
+    mid-chunk exactly like the sequential engine: stop sequences (including
+    one spanning the chunk boundary), EOS, and the token budget."""
+    cfg, params = damped_parts
+    rng = np.random.default_rng(6)
+    prompt = _prompt(rng, cfg, 9)
+
+    free_eng = PagedEngine(cfg, params, _spec_scfg())
+    free = _outputs(free_eng, [prompt], [12])[0]
+    chunks = free_eng.stats()["speculative"]["macro_steps"]
+    free_eng.close()
+    assert len(free) == 12 and chunks < 11      # chunks really multi-token
+
+    for stop_at in (3, 5, 6, 8):                # 2-grams ending mid-sequence
+        stop = [free[stop_at - 1:stop_at + 1]]
+        ref = PagedEngine(cfg, params, _scfg())
+        spec = PagedEngine(cfg, params, _spec_scfg())
+        r = _outputs(ref, [prompt], [12], stop=stop)[0]
+        s = _outputs(spec, [prompt], [12], stop=stop)[0]
+        assert s == r == free[:stop_at + 1]
+        ref.close()
+        spec.close()
+
+    eos = free[4]
+    spec = PagedEngine(cfg, params, _spec_scfg())
+    got = _outputs(spec, [prompt], [12],
+                   sampling=SamplingParams(eos_id=int(eos)))[0]
+    assert got == free[:free.index(eos) + 1]
+    spec.close()
+
+    spec = PagedEngine(cfg, params, _spec_scfg(draft_k=4))
+    got = _outputs(spec, [prompt], [3])[0]      # budget < first chunk
+    assert got == free[:3]
+    spec.close()
+
+
+def test_mixed_temperature_batch_greedy_rows_stay_exact(damped_parts):
+    """Stochastic rows never speculate (the device forces their acceptance
+    to zero) and greedy rows in the same batch stay bit-exact vs the
+    sequential engine."""
+    cfg, params = damped_parts
+    rng = np.random.default_rng(7)
+    g_prompt, s_prompt = _prompt(rng, cfg, 8), _prompt(rng, cfg, 6)
+    ref = PagedEngine(cfg, params, _scfg())
+    rid = ref.submit(g_prompt, 8)
+    ref.run()
+    want = ref.request(rid).output
+    ref.close()
+
+    spec = PagedEngine(cfg, params, _spec_scfg())
+    g = spec.submit(g_prompt, 8)
+    s = spec.submit(s_prompt, 8, SamplingParams(temperature=0.8))
+    spec.run()
+    assert spec.request(g).output == want
+    assert len(spec.request(s).output) == 8
+    sp = spec.stats()["speculative"]
+    # proposals are only counted (and only accepted) for greedy rows
+    assert sp["proposed"] <= sp["macro_steps"] * 3
+    spec.close()
+
+
+# ----------------------------------------------------------------------------
+# token streaming callbacks
+# ----------------------------------------------------------------------------
+
+def test_streaming_callback_engine(damped_parts):
+    """on_token sees exactly the final (truncated) output, in order —
+    accepted chunks stream in acceptance order; a raising callback is
+    disabled after counting, without killing the request."""
+    cfg, params = damped_parts
+    rng = np.random.default_rng(8)
+    prompt = _prompt(rng, cfg, 7)
+    eng = PagedEngine(cfg, params, _spec_scfg())
+    free = _outputs(eng, [prompt], [10])[0]
+
+    got = []
+    rid = eng.submit(prompt, 10, stop=[free[4:6]], on_token=got.append)
+    eng.run()
+    assert eng.request(rid).output == free[:6]
+    assert got == free[:6]                      # streamed == committed
+
+    boom = []
+
+    def bad(tok):
+        boom.append(tok)
+        raise RuntimeError("subscriber died")
+
+    rid = eng.submit(prompt, 6, on_token=bad)
+    eng.run()
+    assert eng.request(rid).output == free[:6]  # request unharmed
+    assert boom == free[:1]                     # disabled after first raise
+    assert eng.stats()["callback_errors"] == 1
+    eng.close()
+
+
+def test_streaming_callback_cluster(damped_parts):
+    cfg, params = damped_parts
+    rng = np.random.default_rng(9)
+    prompts = [_prompt(rng, cfg, n) for n in (6, 9)]
+    clu = ServeCluster(cfg, params,
+                       _spec_scfg(engine_mode="cluster", num_replicas=2,
+                                  cluster_prefill=False))
+    streams = {}
+    crids = []
+    for i, p in enumerate(prompts):
+        streams[i] = []
+        crids.append(clu.submit(p, 7, on_token=streams[i].append))
+    clu.run()
+    for i, crid in enumerate(crids):
+        assert streams[i] == clu.result(crid)["tokens"]
+    st = clu.stats()
+    assert st["speculative"]["replicas"] == 2
+    clu.close()
+
+
+# ----------------------------------------------------------------------------
+# config axis: factory gating and drafter resolution
+# ----------------------------------------------------------------------------
+
+def test_factory_rejects_unsupported_speculative_modes(tiny_parts,
+                                                       rwkv_parts):
+    cfg, params = tiny_parts
+    rcfg, rparams = rwkv_parts
+    with pytest.raises(ValueError, match="fixed"):
+        make_engine(cfg, params, _spec_scfg(engine_mode="fixed"))
+    # dense continuous engine cannot host a non-paging (snapshot) target —
+    # rollback needs the paged engine's backend
+    with pytest.raises(ValueError, match="paged"):
+        make_engine(rcfg, rparams, _spec_scfg(engine_mode="continuous"))
+
+
+def test_drafter_resolution(tiny_parts, rwkv_parts):
+    cfg, params = tiny_parts
+    rcfg, rparams = rwkv_parts
+
+    dcfg = make_draft_config(cfg, 1)
+    assert dcfg.num_layers == 1
+    sliced = slice_draft_params(params, 1)
+    for leaf in jax.tree.leaves(sliced["layers"]):
+        assert leaf.shape[0] == 1               # shared slice, not a copy
+    with pytest.raises(ValueError, match="1 <= n"):
+        make_draft_config(cfg, cfg.num_layers + 1)
+    with pytest.raises(ValueError, match="single-entry"):
+        make_draft_config(get_config("recurrentgemma-9b").reduced(), 1)
+
+    q = quantize_draft_params(params)
+    wq = jax.tree.leaves(q["layers"])[0]
+    w = jax.tree.leaves(params["layers"])[0]
+    assert wq.shape == w.shape and not np.array_equal(
+        np.asarray(wq), np.asarray(w))          # matrices hit the int8 grid
+    np.testing.assert_array_equal(               # 1-D norm scales stay exact
+        np.asarray(q["final_norm"]["scale"]),
+        np.asarray(params["final_norm"]["scale"]))
+
+    for spec in ("self:1", "self-int8"):
+        c, _ = resolve_drafter(cfg, params, _spec_scfg(draft_model=spec))
+        assert c.vocab_size == cfg.vocab_size
+    with pytest.raises(ValueError, match="vocab"):
+        resolve_drafter(cfg, params, _spec_scfg(draft_model="gemma-7b"))
+    with pytest.raises(ValueError, match="global-attention"):
+        build_draft_plane(cfg, params, _spec_scfg(),
+                          drafter=(rcfg, rparams))
+    with pytest.raises(ValueError, match="draft_k"):
+        build_draft_plane(cfg, params, _spec_scfg(draft_k=0))
+
+
+# ----------------------------------------------------------------------------
+# acceptance-rate routing: spec_boost into the cluster cost model
+# ----------------------------------------------------------------------------
+
+def test_spec_boost_measured_after_evidence(damped_parts):
+    cfg, params = damped_parts
+    eng = PagedEngine(cfg, params, _spec_scfg(draft_k=3))
+    assert eng.spec_boost() == 1.0              # no chunks measured yet
+    rng = np.random.default_rng(10)
+    # Long enough that proposed tokens cross the k*8 evidence threshold
+    # even at near-total acceptance (each macro step proposes k but can
+    # commit k+1).
+    _outputs(eng, [_prompt(rng, cfg, 8) for _ in range(2)], [24, 24])
+    boost = eng.spec_boost()
+    sp = eng.stats()["speculative"]
+    assert sp["proposed"] >= 3 * 8              # evidence threshold crossed
+    assert boost == pytest.approx(1.0 + 3 * sp["acceptance_rate"])
+    assert boost > 1.5                          # damped target accepts a lot
+    eng.close()
+
+
+def test_costmodel_spec_boost_scales_decode_bound_cost():
+    cm = CostModel(SidecarProfile(sidecar_matmul_flops=1e10,
+                                  sidecar_mem_bw=1e10, link_lat=5e-6,
+                                  link_bw=16e9))
+    base = ReplicaSignals("r0", free_slots=1, queue_depth=3, max_slots=4,
+                          free_pages=16)
+    fast = dataclasses.replace(base, spec_boost=3.0)
+    slow_cost = cm.replica_cost(64, 8, 1e6, 16, base)
+    fast_cost = cm.replica_cost(64, 8, 1e6, 16, fast)
+    suffix = 64 * 1e6 / cm.p.accel_flops
+    assert fast_cost < slow_cost
+    # the request's own suffix prefill is NOT divided by the boost
+    assert fast_cost == pytest.approx(suffix + (slow_cost - suffix) / 3.0)
